@@ -1,0 +1,90 @@
+"""Shared benchmark plumbing: reference environments, timing, row format."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.core import (
+    ChargingBehavior,
+    Environment,
+    Grid,
+    grid_trace,
+    mobile_carbon_intensity,
+    pack_infra,
+    paper_fleet,
+)
+from repro.core.design_space import CARBON_FREE_CI, RURAL_EXTRA_EDGE_LATENCY_S
+from repro.core.runtime_variance import VarianceScenario, scenario_multipliers
+
+TARGET_NAMES = ("Mobile", "EdgeDC", "DC")
+
+
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_us(fn, *args, reps: int = 20) -> float:
+    fn(*args)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+@lru_cache(maxsize=None)
+def traces():
+    return {g: grid_trace(g) for g in Grid}
+
+
+@lru_cache(maxsize=None)
+def ci_values():
+    t = traces()
+    core = float(np.mean([np.asarray(x.ci_hourly).mean()
+                          for x in t.values()]))
+    return {
+        "night": float(mobile_carbon_intensity(ChargingBehavior.NIGHTTIME,
+                                                t[Grid.CISO])),
+        "avg": float(mobile_carbon_intensity(ChargingBehavior.AVERAGE,
+                                             t[Grid.CISO])),
+        "intel": float(mobile_carbon_intensity(ChargingBehavior.INTELLIGENT,
+                                               t[Grid.CISO])),
+        "urban": float(t[Grid.URBAN].ci_hourly.mean()),
+        "rural": float(t[Grid.RURAL].ci_hourly.mean()),
+        "ciso": float(t[Grid.CISO].ci_hourly.mean()),
+        "core": core,
+        "carbon_free": CARBON_FREE_CI,
+    }
+
+
+def reference_env(var: VarianceScenario = VarianceScenario.NONE, *,
+                  mobile: str = "night", edge: str = "urban",
+                  hyper: str = "ciso") -> Environment:
+    """The paper's default scenario: Nighttime charger / Urban edge /
+    Grid-Mix DC (used by Figs 5, 10-13)."""
+    ci = ci_values()
+    interf, net = scenario_multipliers(var)
+    return Environment.make(ci[mobile], ci[edge], ci["core"], ci[hyper],
+                            interference=interf, net_slowdown=net)
+
+
+@lru_cache(maxsize=None)
+def infra(embodied: str = "act", rural_edge: bool = False,
+          device: str = "phone"):
+    import jax.numpy as jnp
+    base = pack_infra(paper_fleet(), embodied, device=device)
+    if rural_edge:
+        base = base.replace(net_lat=base.net_lat + jnp.asarray(
+            [RURAL_EXTRA_EDGE_LATENCY_S, 0.0], jnp.float32))
+    return base

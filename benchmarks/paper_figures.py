@@ -1,0 +1,316 @@
+"""Benchmarks reproducing every GreenScale table/figure (Figs 5-14).
+
+Each ``fig*`` function returns BenchRow(s): the timed core computation plus
+the derived quantity the paper's figure reports. ``benchmarks.run`` prints
+them as CSV and EXPERIMENTS.md §Paper-validation records the comparison
+against the paper's claims.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BenchRow,
+    TARGET_NAMES,
+    ci_values,
+    infra,
+    reference_env,
+    time_us,
+)
+from repro.core import carbon_model
+from repro.core.carbon_model import Environment, evaluate, evaluate_energy
+from repro.core.runtime_variance import VarianceScenario
+from repro.core.workloads import (
+    ALL_PAPER_WORKLOADS,
+    ARVR_WORKLOADS,
+    GAME_WORKLOADS,
+    by_name,
+)
+
+
+def _solve(w, inf, env, avail=(True, True, True)):
+    b = evaluate(w, inf, env)
+    ok = carbon_model.feasible(b, w)
+    av = jnp.asarray(avail)
+    energy = evaluate_energy(w, inf, env)
+    return {
+        "copt": int(carbon_model.pick_target(b.total_cf, ok, b.total_cf, av)),
+        "eopt": int(carbon_model.pick_target(energy, ok, b.total_cf, av)),
+        "lopt": int(carbon_model.pick_target(b.latency, ok, b.total_cf, av)),
+        "cf": np.asarray(b.total_cf), "energy": np.asarray(energy),
+        "lat": np.asarray(b.latency), "ok": np.asarray(ok & av),
+        "op": np.asarray(b.op_cf), "emb": np.asarray(b.emb_cf),
+    }
+
+
+def fig5_design_space() -> list[BenchRow]:
+    """Per-workload perf/energy/carbon-optimal execution targets."""
+    inf = infra("act")
+    env = reference_env()
+    t = time_us(lambda: evaluate(by_name("resnet50").workload, inf, env))
+    rows = []
+    for info in ALL_PAPER_WORKLOADS:
+        dev_inf = infra("act", device=info.device)
+        s = _solve(info.workload, dev_inf, env, info.available_targets)
+        rows.append(BenchRow(
+            f"fig5/{info.name}", t,
+            f"carbon={TARGET_NAMES[s['copt']]};energy="
+            f"{TARGET_NAMES[s['eopt']]};latency={TARGET_NAMES[s['lopt']]}"))
+    return rows
+
+
+def fig6_scheduler_gap() -> list[BenchRow]:
+    """Carbon-aware vs energy-aware scheduling across the design space.
+    Paper claim: up to 29.1% CF reduction."""
+    from repro.core import build_scenarios, explore, paper_fleet
+
+    table = build_scenarios(paper_fleet())
+    res = explore(ALL_PAPER_WORKLOADS, table)
+    n_w, n_s, _ = res.total_cf.shape
+    iw, isc = np.meshgrid(np.arange(n_w), np.arange(n_s), indexing="ij")
+    cf_carbon = res.total_cf[iw, isc, res.carbon_opt]
+    cf_energy = res.total_cf[iw, isc, res.energy_opt]
+    savings = 1.0 - cf_carbon / np.maximum(cf_energy, 1e-12)
+    t = time_us(lambda: res.total_cf.sum())  # trivial; explore timed below
+    return [BenchRow("fig6/carbon_vs_energy_max_saving", t,
+                     f"max={savings.max() * 100:.1f}%;"
+                     f"mean={savings.mean() * 100:.1f}%;"
+                     f"paper_claim=29.1%")]
+
+
+def fig7_charging() -> list[BenchRow]:
+    """ResNet CF under charging scenarios; paper: intelligent -61.2%."""
+    inf = infra("act")
+    ci = ci_values()
+    w = by_name("resnet50").workload
+    out = {}
+    for name in ("night", "avg", "intel"):
+        env = reference_env(mobile=name if name != "night" else "night")
+        env = Environment.make(ci[name], ci["urban"], ci["core"], ci["ciso"])
+        out[name] = _solve(w, inf, env)
+    saving = 1 - out["intel"]["cf"][0] / out["night"]["cf"][0]
+    t = time_us(lambda: evaluate(w, inf, reference_env()))
+    return [BenchRow(
+        "fig7/intelligent_charging", t,
+        f"mobile_cf_saving={saving * 100:.1f}%;paper_claim=61.2%;"
+        f"opt_night={TARGET_NAMES[out['night']['copt']]};"
+        f"opt_intel={TARGET_NAMES[out['intel']['copt']]}")]
+
+
+def fig8_geo() -> list[BenchRow]:
+    """Urban vs rural edge DC (geographical trade-off)."""
+    ci = ci_values()
+    rows = []
+    for wname in ("resnet50", "mobilenet-ssd"):
+        w = by_name(wname).workload
+        urban = _solve(w, infra("act"), Environment.make(
+            ci["night"], ci["urban"], ci["core"], ci["ciso"]))
+        rural = _solve(w, infra("act", rural_edge=True), Environment.make(
+            ci["night"], ci["rural"], ci["core"], ci["ciso"]))
+        edge_gain = 1 - rural["cf"][1] / urban["cf"][1]
+        rows.append(BenchRow(
+            f"fig8/{wname}", 0.0,
+            f"edge_cf_gain_rural={edge_gain * 100:.1f}%;"
+            f"rural_edge_feasible={bool(rural['ok'][1])};"
+            f"urban_opt={TARGET_NAMES[urban['copt']]};"
+            f"rural_opt={TARGET_NAMES[rural['copt']]}"))
+    return rows
+
+
+def fig9_dc_ci() -> list[BenchRow]:
+    """Grid-mix vs carbon-free DC; impact is workload-dependent."""
+    ci = ci_values()
+    rows = []
+    for wname, avail in (("mobilenet-ssd", (True, True, True)),
+                         ("ar-demo", (True, False, True))):
+        info = by_name(wname)
+        w = info.workload
+        dev_inf = infra("act", device=info.device)
+        mix = _solve(w, dev_inf, Environment.make(
+            ci["night"], ci["urban"], ci["core"], ci["ciso"]), avail)
+        free = _solve(w, dev_inf, Environment.make(
+            ci["night"], ci["urban"], ci["core"], ci["carbon_free"]), avail)
+        delta_dc = 1 - free["cf"][2] / mix["cf"][2]
+        rows.append(BenchRow(
+            f"fig9/{wname}", 0.0,
+            f"dc_cf_drop_when_carbon_free={delta_dc * 100:.1f}%;"
+            f"mix_opt={TARGET_NAMES[mix['copt']]};"
+            f"free_opt={TARGET_NAMES[free['copt']]}"))
+    return rows
+
+
+def fig10_variance() -> list[BenchRow]:
+    """Runtime variance shifts the carbon-optimal target (Inception)."""
+    w = by_name("inception").workload
+    inf = infra("act")
+    rows = []
+    for var in VarianceScenario:
+        s = _solve(w, inf, reference_env(var))
+        rows.append(BenchRow(
+            f"fig10/{var.name.lower()}", 0.0,
+            f"carbon_opt={TARGET_NAMES[s['copt']]};"
+            f"lat={s['lat'][s['copt']] * 1e3:.1f}ms"))
+    return rows
+
+
+def fig11_embodied() -> list[BenchRow]:
+    """ACT vs LCA embodied model can flip the optimal target."""
+    env = reference_env()
+    rows = []
+    for wname in ("mobilenet-ssd", "mobilenet"):
+        w = by_name(wname).workload
+        act = _solve(w, infra("act"), env)
+        lca = _solve(w, infra("lca"), env)
+        rows.append(BenchRow(
+            f"fig11/{wname}", 0.0,
+            f"act_opt={TARGET_NAMES[act['copt']]};"
+            f"lca_opt={TARGET_NAMES[lca['copt']]};"
+            f"flips={act['copt'] != lca['copt']}"))
+    return rows
+
+
+def fig12_provisioning() -> list[BenchRow]:
+    """Number of rented DC servers: efficiency-CF trade-off.
+
+    Model (paper §5.4: 'when the number of servers increases, the latency
+    and operational efficiency are improved. Due to the improved latency,
+    idle overhead and embodied CF overhead are also improved'): renting n
+    servers splits the optimal batch B=1024 across them; each request waits
+    for its server's batch to FILL, so the effective DC computation time —
+    which Table 1 multiplies into the idle and embodied terms of every
+    component — scales with B/n. The queueing enters as DC-side
+    interference (T_comp_H multiplier), exactly the paper's latency
+    mechanism.
+    """
+    w = by_name("squeezenet").workload
+    B = 1024.0
+    arrivals_per_s = 2000.0  # request arrival rate feeding the batch queue
+    env0 = reference_env()
+    t_h = float(w.flops / infra("act").eff_flops[2])
+    configs = []
+    for n_servers in (2, 4, 8, 16, 32):
+        batch = B / n_servers
+        fill_s = batch / arrivals_per_s  # time to fill one server's batch
+        inf = infra("act").replace(
+            n_batch_dc=jnp.asarray(batch, jnp.float32))
+        interf = jnp.asarray([1.0, 1.0, 1.0 + fill_s / max(t_h, 1e-9)],
+                             jnp.float32)
+        env = Environment(ci=env0.ci, interference=interf,
+                          net_slowdown=env0.net_slowdown)
+        s = _solve(w, inf, env)
+        configs.append((n_servers, float(s["cf"][2]), float(s["lat"][2]),
+                        s["copt"]))
+    cf_first = configs[0][1]
+    cf_best = min(c[1] for c in configs)
+    saving = 1 - cf_best / cf_first
+    shift = (TARGET_NAMES[configs[0][3]], TARGET_NAMES[configs[-1][3]])
+    detail = ";".join(f"n{c[0]}:dc_cf={c[1]:.2e},lat={c[2] * 1e3:.0f}ms"
+                      for c in configs)
+    return [BenchRow("fig12/provisioning", 0.0,
+                     f"max_saving={saving * 100:.1f}%;paper_claim=24.9%;"
+                     f"opt_shift={shift[0]}->{shift[1]};" + detail)]
+
+
+def fig13_knobs() -> list[BenchRow]:
+    """Workload-dependent parameters: game resolution + AR/VR partitioning."""
+    rows = []
+    inf = infra("act")
+    env = reference_env()
+
+    # (a) game resolution FHD -> HD: pixels x0.444 scales render flops and
+    # the streamed frame payload.
+    g = by_name("genshin-impact")
+    w_fhd = g.workload
+    scale = (1280 * 720) / (1920 * 1080)
+    w_hd = dataclasses.replace(
+        w_fhd, flops=w_fhd.flops * scale, mem_bytes=w_fhd.mem_bytes * scale,
+        data_out=w_fhd.data_out * scale)
+    s_fhd = _solve(w_fhd, inf, env, g.available_targets)
+    s_hd = _solve(w_hd, inf, env, g.available_targets)
+    cf_fhd = s_fhd["cf"][s_fhd["copt"]]
+    cf_hd = s_hd["cf"][s_hd["copt"]]
+    rows.append(BenchRow(
+        "fig13/game_resolution", 0.0,
+        f"saving={(1 - cf_hd / cf_fhd) * 100:.1f}%;paper_claim=31.1%"))
+
+    # (b) AR/VR pipeline partitioning vs full offload (the paper's
+    # unpartitioned deployment streams everything to the DC): keeping
+    # perception on-device (1) shrinks the uplink payload to the stage-
+    # boundary tensor (540 -> 160 KB) and (2) raises the utilization of
+    # both devices — the mobile is computing instead of idling during the
+    # DC stages, cutting its idle CF (paper: -55.3%).
+    ar = next(a for a in ARVR_WORKLOADS if a.name == "ar-demo")
+    w = ar.workload
+    inf = infra("act", device="jetson")
+    s_dc = _solve(w, inf, env, (False, False, True))
+    cf_baseline = s_dc["cf"][2]  # full offload
+
+    f1, f2, f3 = ar.stage_flops_frac
+    # device part: perception, no network involvement, not streaming
+    w_dev = dataclasses.replace(w, flops=w.flops * f1,
+                                mem_bytes=w.mem_bytes * f1,
+                                data_in=jnp.zeros_like(w.data_in),
+                                data_out=jnp.zeros_like(w.data_out),
+                                continuous=jnp.zeros_like(w.continuous),
+                                fps_req=jnp.zeros_like(w.fps_req))
+    # cloud part: visual+audio with the intermediate tensor as uplink
+    w_cloud = dataclasses.replace(
+        w, flops=w.flops * (f2 + f3), mem_bytes=w.mem_bytes * (f2 + f3),
+        data_in=jnp.asarray(ar.stage_bytes[1], jnp.float32))
+    s_dev = _solve(w_dev, inf, env, (True, False, False))
+    s_cloud = _solve(w_cloud, inf, env, (False, False, True))
+    # during the cloud stages the device is computing perception for the
+    # next frame, not idling: drop the double-counted device idle from the
+    # cloud part (op[D-target, Mobile-component] radio stays).
+    overlap_idle = min(s_dev["cf"][0], s_cloud["op"][2][0])
+    cf_part = s_dev["cf"][0] + s_cloud["cf"][2] - overlap_idle
+    idle_baseline = s_dc["op"][2][0]  # device idle+radio during full offload
+    idle_part = s_cloud["op"][2][0] - overlap_idle
+    idle_drop = 1 - idle_part / max(idle_baseline, 1e-12)
+    rows.append(BenchRow(
+        "fig13/arvr_partitioning", 0.0,
+        f"saving={(1 - cf_part / cf_baseline) * 100:.1f}%;paper_claim=14.8%;"
+        f"idle_cf_drop={idle_drop * 100:.1f}%;paper_idle_claim=55.3%"))
+    return rows
+
+
+def fig14_methods() -> list[BenchRow]:
+    """Scheduling methods: accuracy / overhead / CF degradation."""
+    from repro.core import build_scenarios, explore, paper_fleet
+    from repro.core.schedulers import (
+        BOScheduler,
+        ClassificationScheduler,
+        EnergyAwareScheduler,
+        OracleScheduler,
+        RLScheduler,
+        RegressionScheduler,
+        build_dataset,
+        evaluate_scheduler,
+    )
+
+    table = build_scenarios(paper_fleet())
+    res = explore(ALL_PAPER_WORKLOADS, table)
+    ds = build_dataset(ALL_PAPER_WORKLOADS, res, table)
+    train, test = ds.split()
+    rows = []
+    for s in (OracleScheduler(), RegressionScheduler(),
+              ClassificationScheduler(), BOScheduler(budget=128),
+              RLScheduler(), EnergyAwareScheduler()):
+        ev = evaluate_scheduler(s, train, test)
+        rows.append(BenchRow(
+            f"fig14/{ev.name}", ev.flops_per_decision,
+            f"accuracy={ev.accuracy * 100:.1f}%;"
+            f"cf_degradation={ev.cf_degradation * 100:.2f}%;"
+            f"qos_violations={ev.qos_violation_rate * 100:.2f}%;"
+            f"train_flops={ev.train_flops:.2e}"))
+    return rows
+
+
+ALL_FIGS = (fig5_design_space, fig6_scheduler_gap, fig7_charging, fig8_geo,
+            fig9_dc_ci, fig10_variance, fig11_embodied, fig12_provisioning,
+            fig13_knobs, fig14_methods)

@@ -1,0 +1,111 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run artifact JSON (produced by ``repro.launch.dryrun --json``)
+and derives, per cell:
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s)
+  memory term     = HLO_bytes / (chips x 819e9 B/s)
+  collective term = collective_bytes / (chips x 50e9 B/s per link)
+
+HLO quantities from cost_analysis are *per device* (post-SPMD local module),
+so per-chip terms divide by the per-chip rates directly; fleet totals are
+per-device x chips. MODEL_FLOPS = 6·N·D (train, dense), 6·N_active·D (MoE),
+or 2·N_active·D_new (decode); the MODEL/HLO ratio flags remat/masking waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import BenchRow
+from repro.configs import get_config, get_shape
+from repro.configs.base import ShapeKind
+from repro.core.constants import (
+    TPU_V5E_HBM_BW,
+    TPU_V5E_ICI_BW,
+    TPU_V5E_PEAK_BF16_FLOPS,
+)
+
+DEFAULT_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                                "artifacts", "dryrun_baseline.json")
+
+
+def model_flops(arch: str, shape_id: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_id)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == ShapeKind.TRAIN:
+        return 6.0 * n_active * tokens
+    if shape.kind == ShapeKind.PREFILL:
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    peak_mem_gib: float
+
+    def derived(self) -> str:
+        return (f"compute={self.t_compute:.4f}s;memory={self.t_memory:.4f}s;"
+                f"collective={self.t_collective:.4f}s;"
+                f"bound={self.bottleneck};"
+                f"useful={self.useful_ratio:.2f};"
+                f"peak={self.peak_mem_gib:.1f}GiB")
+
+
+def analyze(record: dict) -> RooflineRow | None:
+    if not record.get("ok"):
+        return None
+    chips = 1
+    for d in record["mesh"].split("x"):
+        chips *= int(d)
+    # cost_analysis numbers are per-device
+    t_c = record["flops"] / TPU_V5E_PEAK_BF16_FLOPS
+    t_m = record["hlo_bytes"] / TPU_V5E_HBM_BW
+    coll = record["collectives"].get("total", 0.0)
+    t_x = coll / TPU_V5E_ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bound = max(terms, key=terms.get)
+    mf = model_flops(record["arch"], record["shape"])
+    hlo_total = record["flops"] * chips
+    return RooflineRow(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bound, model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / max(hlo_total, 1e-30),
+        peak_mem_gib=record["peak_mem_per_device"] / 2 ** 30)
+
+
+def run(artifact: str = DEFAULT_ARTIFACT) -> list[BenchRow]:
+    if not os.path.exists(artifact):
+        return [BenchRow("roofline/ARTIFACT_MISSING", 0.0,
+                         f"run `python -m repro.launch.dryrun --all --json "
+                         f"{artifact}` first")]
+    with open(artifact) as f:
+        records = json.load(f)
+    rows = []
+    for rec in records:
+        rr = analyze(rec)
+        if rr is None:
+            rows.append(BenchRow(
+                f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}", 0.0,
+                "SKIP:" + rec.get("error", "")[:70]))
+            continue
+        rows.append(BenchRow(
+            f"roofline/{rr.arch}/{rr.shape}/{rr.mesh}", 0.0, rr.derived()))
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure + the beyond-paper LM suites.
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark group names")
+    ap.add_argument("--artifact", default=None,
+                    help="dry-run JSON for the roofline table")
+    args = ap.parse_args()
+
+    from benchmarks import lm_design_space, roofline
+    from benchmarks.paper_figures import ALL_FIGS
+
+    groups = [(fig.__name__, fig) for fig in ALL_FIGS]
+    groups.append(("lm_design_space", lm_design_space.run))
+    if args.artifact:
+        groups.append(("roofline", lambda: roofline.run(args.artifact)))
+    else:
+        groups.append(("roofline", roofline.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in groups:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Fault-tolerant training demo: stragglers, node loss, elastic restart.
+
+Simulates a 4-way data-parallel run where (a) one rank misses its per-step
+deadline (its gradient contribution is masked, the step proceeds), and
+(b) a node dies at step 12 — training restores the latest atomic checkpoint
+onto a *smaller* DP width and keeps going (the data pipeline is
+(step, shard)-deterministic, the checkpoint mesh-independent).
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig, ShapeKind
+from repro.data import batch_for
+from repro.models import init_params
+from repro.train.fault import make_straggler_train_step
+from repro.train.optimizer import adamw, warmup_cosine
+from repro.train.train_step import init_train_state
+
+CFG = get_config("deepseek-7b", smoke=True)
+SHAPE = ShapeConfig("t", ShapeKind.TRAIN, 64, 8)
+
+
+def sharded_batch(step: int, n_shards: int):
+    parts = [batch_for(CFG, SHAPE, step=step, shard=s, n_shards=n_shards)
+             for s in range(n_shards)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="ft_ckpt_")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, CFG, dtype=jnp.float32)
+    opt = adamw(warmup_cosine(2e-3, 10, 60))
+    state = init_train_state(params, opt)
+
+    step4 = jax.jit(make_straggler_train_step(CFG, opt, n_shards=4))
+    step2 = jax.jit(make_straggler_train_step(CFG, opt, n_shards=2))
+
+    print("phase 1: 4-way DP, rank 2 straggles at steps 5-7")
+    for i in range(12):
+        alive = jnp.asarray([True, True, i not in (5, 6, 7), True])
+        state, m = step4(state, sharded_batch(i, 4), alive)
+        if int(m["n_alive"]) < 4:
+            print(f"  step {i:2d}: straggler masked, n_alive="
+                  f"{int(m['n_alive'])}, loss={float(m['loss']):.4f}")
+        ckpt.save(root, i + 1, state)
+
+    print("phase 2: node failure at step 12 -> elastic restart on 2-way DP")
+    latest = ckpt.latest_step(root)
+    state = ckpt.restore(root, latest, state)
+    print(f"  restored step {latest} from {root}")
+    for i in range(latest, latest + 8):
+        state, m = step2(state, sharded_batch(i, 2), jnp.ones(2, bool))
+    print(f"  continued to step {int(state.step)} on half the fleet, "
+          f"loss={float(m['loss']):.4f}")
+    print("done: masked-gradient math and restart path both exercised")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: the GreenScale carbon design space in ~60 lines.
+
+Evaluates the paper's Table-1 carbon model for a ResNet-50 inference request
+across the edge-cloud spectrum, explores a slice of the design space, and
+prints the carbon-optimal execution target per scenario.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    ChargingBehavior,
+    Environment,
+    Grid,
+    build_scenarios,
+    carbon_model,
+    explore,
+    grid_trace,
+    mobile_carbon_intensity,
+    pack_infra,
+    paper_fleet,
+)
+from repro.core.design_space import ScenarioAxes, scenario_mask
+from repro.core.workloads import AI_WORKLOADS, by_name
+
+TARGETS = ("Mobile", "Edge DC", "Hyperscale DC")
+
+
+def main() -> None:
+    fleet = paper_fleet()
+    infra = pack_infra(fleet, "act")
+
+    # --- one workload, one environment ---------------------------------------
+    ciso = grid_trace(Grid.CISO)
+    urban = grid_trace(Grid.URBAN)
+    env = Environment.make(
+        ci_mobile=mobile_carbon_intensity(ChargingBehavior.NIGHTTIME, ciso),
+        ci_edge=float(urban.ci_hourly.mean()),
+        ci_core=280.0,
+        ci_hyper=float(ciso.ci_hourly.mean()),
+    )
+    w = by_name("resnet50")
+    b = carbon_model.evaluate(w.workload, infra, env)
+    print("ResNet-50, nighttime charger / urban edge / grid-mix DC:")
+    for t in range(3):
+        print(f"  {TARGETS[t]:14s} carbon={float(b.total_cf[t]) * 1e3:7.3f} mg"
+              f"  latency={float(b.latency[t]) * 1e3:6.1f} ms"
+              f"  (op {float(b.op_total[t]) * 1e3:6.3f} /"
+              f" emb {float(b.emb_total[t]) * 1e3:6.3f})")
+    opt = carbon_model.optimal_target(b, w.workload)
+    print(f"  -> carbon-optimal: {TARGETS[int(opt)]}\n")
+
+    # --- a design-space slice: all AI workloads x 24 hours --------------------
+    axes = ScenarioAxes(charging=(ChargingBehavior.NIGHTTIME,),
+                        mobile_grid=(Grid.CISO,),
+                        edge_location=(Grid.URBAN,),
+                        dc_carbon_free=(False,),
+                        embodied=("act",))
+    table = build_scenarios(fleet, axes)
+    res = explore(AI_WORKLOADS, table)
+    print(f"explored {res.n_points} design-space cells "
+          f"({len(res.workload_names)} workloads x {len(table.rows)} "
+          f"scenarios x 3 targets)")
+    mask = scenario_mask(table.rows, variance="NONE")
+    for i, name in enumerate(res.workload_names):
+        picks = res.carbon_opt[i][mask]
+        hist = {TARGETS[t]: int((picks == t).sum()) for t in range(3)}
+        print(f"  {name:14s} carbon-optimal by hour: {hist}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Atomic, resumable, mesh-independent checkpointing."""
+
+from repro.checkpoint.store import (
+    latest_step,
+    restore,
+    restore_pytree,
+    save,
+    save_pytree,
+)

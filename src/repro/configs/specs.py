@@ -1,0 +1,90 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``param_specs`` / ``batch_specs`` / ``decode_specs`` produce the exact pytrees
+the launch step functions take, as shapes only — the 72B-parameter configs
+never materialize. Stub modality frontends surface here: qwen2-vl's
+``patch_embeds`` and whisper's ``encoder_frames`` are precomputed-embedding
+inputs, per the assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    Family,
+    ModelConfig,
+    ShapeConfig,
+    ShapeKind,
+    supports_long_context,
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def max_positions_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Learned-position-table size needed by this cell (whisper extension)."""
+    if not cfg.max_position_embeddings:
+        return 0
+    return max(cfg.max_position_embeddings, shape.seq_len)
+
+
+def param_specs(cfg: ModelConfig, shape: ShapeConfig | None = None):
+    """Parameter pytree as ShapeDtypeStructs (via eval_shape, no allocation)."""
+    from repro.models import init_params
+    mp = max_positions_for(cfg, shape) if shape is not None else 0
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg, max_positions=mp))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training / prefill batch structs: tokens, labels, stub-frontend inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.mrope:
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    if cfg.family == Family.VLM and cfg.vision_patches:
+        batch["patch_embeds"] = _sds(
+            (B, min(cfg.vision_patches, S), cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        batch["encoder_frames"] = _sds(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(decode_state_struct, tokens_struct) for serve_step lowering.
+
+    The decode state holds a KV cache of ``shape.seq_len`` tokens (or the SWA
+    window / SSM state for sub-quadratic archs) — ``decode_*`` cells lower one
+    new token against that cache.
+    """
+    from repro.models import init_decode_state
+
+    B, S = shape.global_batch, shape.seq_len
+    params = param_specs(cfg, shape)
+    kwargs = {}
+    if cfg.is_encoder_decoder:
+        kwargs["encoder_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+
+    def build(params, **kw):
+        return init_decode_state(params, cfg, B, S, **kw)
+
+    state = jax.eval_shape(build, params, **kwargs)
+    tokens = _sds((B, 1), jnp.int32)
+    return state, tokens
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? Returns (ok, reason-if-not)."""
+    if shape.kind == ShapeKind.LONG_DECODE and not supports_long_context(cfg):
+        return False, ("full attention is O(L^2) at 524288 tokens; only "
+                       "SSM/hybrid/SWA archs run long_500k (DESIGN.md §4)")
+    return True, ""

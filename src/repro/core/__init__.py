@@ -1,0 +1,55 @@
+"""GreenScale core: the paper's carbon design-space framework in JAX."""
+
+from repro.core.constants import Component, EnergySource, Target
+from repro.core.carbon_intensity import (
+    ChargingBehavior,
+    Grid,
+    GridTrace,
+    all_grid_traces,
+    grid_trace,
+    mobile_carbon_intensity,
+)
+from repro.core.carbon_model import (
+    CFBreakdown,
+    Environment,
+    evaluate,
+    evaluate_energy,
+    feasible,
+    optimal_target,
+    optimal_targets_all_metrics,
+)
+from repro.core.design_space import (
+    DesignSpaceResult,
+    ScenarioAxes,
+    ScenarioTable,
+    build_scenarios,
+    explore,
+    scenario_mask,
+)
+from repro.core.infrastructure import (
+    ComputeSpec,
+    Fleet,
+    InfraParams,
+    NetworkSpec,
+    pack_infra,
+    paper_fleet,
+    tpu_fleet,
+)
+from repro.core.runtime_variance import (
+    StochasticVariance,
+    VarianceScenario,
+    scenario_multipliers,
+)
+from repro.core.workloads import (
+    AI_WORKLOADS,
+    ALL_PAPER_WORKLOADS,
+    ARVR_WORKLOADS,
+    GAME_WORKLOADS,
+    Category,
+    Workload,
+    WorkloadInfo,
+    by_name,
+    stack_workloads,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

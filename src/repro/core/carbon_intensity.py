@@ -1,0 +1,247 @@
+"""Time-varying, location-dependent carbon intensity (paper §3.2, Fig 4).
+
+The container is offline, so the hourly generation reports of the US grids
+(electricityMaps / WattTime, paper refs [25,120]) are synthesized here from the
+published *shapes* of the two grids the paper plots in Fig 4:
+
+  * ``CISO``  (California): solar-dominated — deep midday CI dip, gas at night.
+  * ``NYISO`` (New York):   wind-fluctuating — CI oscillates through the day on
+    a gas/nuclear/hydro base.
+
+plus two auxiliary profiles used for the urban/rural edge-DC scenarios (§5.2):
+
+  * ``URBAN`` : little local renewable generation -> high, flat CI.
+  * ``RURAL`` : plenty of wind/solar -> low CI (with diurnal structure).
+
+A grid is represented as an hourly generation-mix matrix ``(24, n_sources)``
+whose rows sum to 1; its hourly carbon intensity is the mix-weighted Table-3
+source intensity.  Everything is a jnp array so downstream models can be
+jit/vmap-ed over time, scenario, and uncertainty samples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import (
+    HOURS_PER_DAY,
+    SOURCE_CI_LIST,
+    EnergySource,
+)
+
+_N_SOURCES = len(EnergySource)
+_SOURCE_CI = jnp.asarray(SOURCE_CI_LIST)
+
+
+class Grid(enum.IntEnum):
+    CISO = 0
+    NYISO = 1
+    URBAN = 2
+    RURAL = 3
+
+
+class ChargingBehavior(enum.IntEnum):
+    """Mobile battery-charging behaviour models (paper §4.3, refs [34,93,103])."""
+
+    NIGHTTIME = 0  # charges only during the night
+    AVERAGE = 1  # charges uniformly on demand through the day
+    INTELLIGENT = 2  # charges only when renewable energy is available
+
+
+def _solar_curve(hours: np.ndarray) -> np.ndarray:
+    """Daylight bell centered at 13:00, zero at night."""
+    x = np.clip(np.cos((hours - 13.0) / 7.0 * np.pi / 2.0), 0.0, None)
+    return x**1.5
+
+
+def _mix_ciso() -> np.ndarray:
+    """California-like: big solar hump midday, gas (+imported coal) at night."""
+    h = np.arange(HOURS_PER_DAY, dtype=np.float64)
+    solar = 0.70 * _solar_curve(h)
+    wind = 0.08 + 0.04 * np.sin((h - 2.0) / 24.0 * 2 * np.pi)
+    hydro = np.full_like(h, 0.07)
+    nuclear = np.full_like(h, 0.07)
+    other = np.full_like(h, 0.03)
+    night = ((h >= 21) | (h < 6)).astype(np.float64)
+    coal = 0.08 * night  # imported baseload at night
+    gas = np.clip(1.0 - (solar + wind + hydro + nuclear + other + coal),
+                  0.05, None)
+    mix = np.zeros((HOURS_PER_DAY, _N_SOURCES))
+    mix[:, EnergySource.COAL] = coal
+    mix[:, EnergySource.SOLAR] = solar
+    mix[:, EnergySource.WIND] = wind
+    mix[:, EnergySource.WATER] = hydro
+    mix[:, EnergySource.NUCLEAR] = nuclear
+    mix[:, EnergySource.OTHER] = other
+    mix[:, EnergySource.NATURAL_GAS] = gas
+    return mix / mix.sum(axis=1, keepdims=True)
+
+
+def _mix_nyiso() -> np.ndarray:
+    """New-York-like: intermittent wind on a gas/nuclear/hydro base -> CI fluctuates."""
+    h = np.arange(HOURS_PER_DAY, dtype=np.float64)
+    # Wind comes and goes in a few multi-hour gusts through the day (Fig 4 right).
+    wind = 0.12 + 0.10 * np.sin(h / 24.0 * 6 * np.pi) + 0.05 * np.sin(h / 24.0 * 2 * np.pi)
+    wind = np.clip(wind, 0.02, None)
+    hydro = np.full_like(h, 0.18)
+    nuclear = np.full_like(h, 0.22)
+    other = np.full_like(h, 0.05)
+    gas = np.clip(1.0 - (wind + hydro + nuclear + other), 0.05, None)
+    mix = np.zeros((HOURS_PER_DAY, _N_SOURCES))
+    mix[:, EnergySource.WIND] = wind
+    mix[:, EnergySource.WATER] = hydro
+    mix[:, EnergySource.NUCLEAR] = nuclear
+    mix[:, EnergySource.OTHER] = other
+    mix[:, EnergySource.NATURAL_GAS] = gas
+    return mix / mix.sum(axis=1, keepdims=True)
+
+
+def _mix_urban() -> np.ndarray:
+    """Urban area: 'relatively small' renewable generation (paper §4.3)."""
+    h = np.arange(HOURS_PER_DAY, dtype=np.float64)
+    solar = 0.06 * _solar_curve(h)
+    wind = np.full_like(h, 0.03)
+    nuclear = np.full_like(h, 0.15)
+    coal = np.full_like(h, 0.12)
+    other = np.full_like(h, 0.06)
+    gas = np.clip(1.0 - (solar + wind + nuclear + coal + other), 0.05, None)
+    mix = np.zeros((HOURS_PER_DAY, _N_SOURCES))
+    mix[:, EnergySource.SOLAR] = solar
+    mix[:, EnergySource.WIND] = wind
+    mix[:, EnergySource.NUCLEAR] = nuclear
+    mix[:, EnergySource.COAL] = coal
+    mix[:, EnergySource.OTHER] = other
+    mix[:, EnergySource.NATURAL_GAS] = gas
+    return mix / mix.sum(axis=1, keepdims=True)
+
+
+def _mix_rural() -> np.ndarray:
+    """Rural area: 'a plenty of renewable energy sources' (paper §4.3)."""
+    h = np.arange(HOURS_PER_DAY, dtype=np.float64)
+    solar = 0.40 * _solar_curve(h)
+    wind = 0.35 + 0.10 * np.sin(h / 24.0 * 4 * np.pi)
+    hydro = np.full_like(h, 0.12)
+    other = np.full_like(h, 0.03)
+    gas = np.clip(1.0 - (solar + wind + hydro + other), 0.03, None)
+    mix = np.zeros((HOURS_PER_DAY, _N_SOURCES))
+    mix[:, EnergySource.SOLAR] = solar
+    mix[:, EnergySource.WIND] = wind
+    mix[:, EnergySource.WATER] = hydro
+    mix[:, EnergySource.OTHER] = other
+    mix[:, EnergySource.NATURAL_GAS] = gas
+    return mix / mix.sum(axis=1, keepdims=True)
+
+
+_GRID_MIX_BUILDERS = {
+    Grid.CISO: _mix_ciso,
+    Grid.NYISO: _mix_nyiso,
+    Grid.URBAN: _mix_urban,
+    Grid.RURAL: _mix_rural,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridTrace:
+    """Hourly generation mix + derived hourly carbon intensity for one grid."""
+
+    mix: jax.Array  # (24, n_sources), rows sum to 1
+    ci_hourly: jax.Array  # (24,) gCO2eq/kWh
+
+    @property
+    def ci_mean(self) -> jax.Array:
+        return jnp.mean(self.ci_hourly)
+
+
+def grid_trace(grid: Grid | int) -> GridTrace:
+    mix = jnp.asarray(_GRID_MIX_BUILDERS[Grid(int(grid))]())
+    return GridTrace(mix=mix, ci_hourly=mix @ _SOURCE_CI)
+
+
+def all_grid_traces() -> GridTrace:
+    """Stacked traces for every grid, leading axis = Grid (vmap-friendly)."""
+    traces = [grid_trace(g) for g in Grid]
+    return GridTrace(
+        mix=jnp.stack([t.mix for t in traces]),
+        ci_hourly=jnp.stack([t.ci_hourly for t in traces]),
+    )
+
+
+# --- Mobile charging behaviour -> effective device carbon intensity -----------
+
+
+def charging_profile(behavior: ChargingBehavior | int, ci_hourly: jax.Array) -> jax.Array:
+    """Hourly probability (sums to 1) that a unit of battery charge is drawn.
+
+    NIGHTTIME  : uniform over 22:00-06:00 (paper Fig 4, yellow area).
+    AVERAGE    : uniform over the day (paper Fig 4, blue area).
+    INTELLIGENT: only during the lowest-CI hours of the local grid (bottom
+                 third of hours -> when renewable energy is available).
+    """
+    behavior = ChargingBehavior(int(behavior))
+    hours = jnp.arange(HOURS_PER_DAY)
+    if behavior == ChargingBehavior.NIGHTTIME:
+        mask = (hours >= 22) | (hours < 6)
+        prof = mask.astype(jnp.float32)
+    elif behavior == ChargingBehavior.AVERAGE:
+        prof = jnp.ones((HOURS_PER_DAY,), jnp.float32)
+    else:  # INTELLIGENT
+        k = HOURS_PER_DAY // 3
+        thresh = jnp.sort(ci_hourly)[k - 1]
+        prof = (ci_hourly <= thresh).astype(jnp.float32)
+    return prof / jnp.sum(prof)
+
+
+def mobile_carbon_intensity(
+    behavior: ChargingBehavior | int, trace: GridTrace
+) -> jax.Array:
+    """Average CI of the energy stored in the phone battery (gCO2eq/kWh).
+
+    The battery is an energy buffer: the CI of the charge equals the
+    charge-weighted CI of the grid at charging time (paper §3.2 Fig 4).
+    """
+    prof = charging_profile(behavior, trace.ci_hourly)
+    return jnp.sum(prof * trace.ci_hourly)
+
+
+# --- Uncertainty injection (paper §5.2) ---------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_samples",))
+def perturb_mix(
+    key: jax.Array, mix: jax.Array, n_samples: int = 64, scale: float = 0.168
+) -> jax.Array:
+    """Sample perturbed generation mixes modelling renewable fluctuation.
+
+    Paper §5.2: solar fluctuation ~ Beta [33], wind fluctuation ~ Weibull [16];
+    injected magnitude ~16.8% of carbon-intensity fluctuation.  Solar/wind
+    columns are multiplied by Beta/Weibull-distributed factors (mean 1) and the
+    mix is renormalized; the shortfall/excess is absorbed by natural gas, the
+    marginal generator in both grids.
+    """
+    k_solar, k_wind = jax.random.split(key)
+    # Beta(a,b) scaled to mean 1: factor = Beta(5,5)*2 has mean 1, sd~0.30.
+    beta = jax.random.beta(k_solar, 5.0, 5.0, (n_samples,) + mix.shape[:-1]) * 2.0
+    # Weibull(k=2) via inverse CDF; normalize to mean 1 (gamma(1+1/k)=0.8862).
+    u = jax.random.uniform(k_wind, (n_samples,) + mix.shape[:-1], minval=1e-6)
+    weib = (-jnp.log(u)) ** (1.0 / 2.0) / 0.8862
+    solar_f = 1.0 + scale * (beta - 1.0) / 0.30
+    wind_f = 1.0 + scale * (weib - 1.0) / 0.52
+    out = jnp.broadcast_to(mix, (n_samples,) + mix.shape)
+    out = out.at[..., EnergySource.SOLAR].mul(jnp.clip(solar_f, 0.0, None))
+    out = out.at[..., EnergySource.WIND].mul(jnp.clip(wind_f, 0.0, None))
+    # Gas absorbs the imbalance so rows still sum to 1 (clipped at >=0).
+    resid = 1.0 - (out.sum(-1) - out[..., EnergySource.NATURAL_GAS])
+    out = out.at[..., EnergySource.NATURAL_GAS].set(jnp.clip(resid, 0.0, None))
+    return out / out.sum(-1, keepdims=True)
+
+
+def ci_of_mix(mix: jax.Array) -> jax.Array:
+    """Carbon intensity of an arbitrary generation mix (last axis = sources)."""
+    return mix @ _SOURCE_CI

@@ -1,0 +1,207 @@
+"""Exhaustive carbon design-space exploration (paper §5, Fig 5/6).
+
+The paper explores ~200K combinations per application category: workload x
+charging behaviour x grid x edge-DC location x DC sourcing x embodied model x
+runtime variance x hour-of-day x execution target.  Here the entire space is
+a single vmapped evaluation of the Table-1 model: ``explore()`` materializes
+the scenario grid as stacked ``Environment``/``InfraParams`` pytrees and maps
+``carbon_model.evaluate`` over it in one XLA program.
+
+The output (``DesignSpaceResult``) is the substrate every figure benchmark
+and every learned scheduler consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carbon_model, carbon_intensity as ci_mod
+from repro.core.carbon_intensity import ChargingBehavior, Grid
+from repro.core.carbon_model import CFBreakdown, Environment
+from repro.core.infrastructure import Fleet, InfraParams, pack_infra
+from repro.core.runtime_variance import VarianceScenario, scenario_multipliers
+from repro.core.workloads import Workload, WorkloadInfo, stack_workloads
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioAxes:
+    """The discrete axes of the paper's design space (defaults = paper §5)."""
+
+    charging: Sequence[ChargingBehavior] = tuple(ChargingBehavior)
+    mobile_grid: Sequence[Grid] = (Grid.CISO, Grid.NYISO)
+    edge_location: Sequence[Grid] = (Grid.URBAN, Grid.RURAL)
+    dc_carbon_free: Sequence[bool] = (False, True)  # grid-mix vs carbon-free
+    embodied: Sequence[str] = ("act", "lca")
+    variance: Sequence[VarianceScenario] = tuple(VarianceScenario)
+    hours: Sequence[int] = tuple(range(24))
+
+    def grid_size(self) -> int:
+        return (len(self.charging) * len(self.mobile_grid) * len(self.edge_location)
+                * len(self.dc_carbon_free) * len(self.embodied)
+                * len(self.variance) * len(self.hours))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioTable:
+    """Host-side enumeration of scenarios + stacked device-side pytrees.
+
+    ``infras_jetson`` mirrors ``infras`` with the Jetson in tier 0 (the
+    paper's AR/VR device); None when the fleet has no AR/VR spec.
+    """
+
+    rows: list[dict]  # host metadata, one per scenario
+    envs: Environment  # stacked, leading axis = scenario
+    infras: InfraParams  # stacked, leading axis = scenario (ACT/LCA differ)
+    infras_jetson: InfraParams | None = None
+
+
+#: Carbon-free PPA carbon intensity: the residual intensity of a 100%%
+#: renewable-covered DC (paper footnote 1 — hourly matching, wind/solar mix).
+CARBON_FREE_CI = 20.0
+
+#: Rural edge network: longer propagation (paper Fig 2: 5->20 ms by
+#: location; exact value co-calibrated with paper_fleet()).
+RURAL_EXTRA_EDGE_LATENCY_S = 0.014875
+
+
+def build_scenarios(fleet: Fleet, axes: ScenarioAxes | None = None) -> ScenarioTable:
+    """Materialize the scenario grid as stacked pytrees (vmap-ready)."""
+    axes = axes or ScenarioAxes()
+    traces = {g: ci_mod.grid_trace(g) for g in Grid}
+    # Core routers see the average CI across grids (paper §4.3).
+    ci_core = float(np.mean([np.asarray(t.ci_hourly).mean() for t in traces.values()]))
+
+    packed = {m: pack_infra(fleet, m) for m in ("act", "lca")}
+    packed_jet = ({m: pack_infra(fleet, m, device="jetson")
+                   for m in ("act", "lca")}
+                  if fleet.mobile_arvr is not None else None)
+
+    rows: list[dict] = []
+    env_list: list[Environment] = []
+    infra_list: list[InfraParams] = []
+    jet_list: list[InfraParams] = []
+    for charging, mgrid, eloc, cfree, emb, var, hour in itertools.product(
+            axes.charging, axes.mobile_grid, axes.edge_location,
+            axes.dc_carbon_free, axes.embodied, axes.variance, axes.hours):
+        mtrace = traces[mgrid]
+        etrace = traces[eloc]
+        ci_mobile = ci_mod.mobile_carbon_intensity(charging, mtrace)
+        ci_edge = etrace.ci_hourly[hour]
+        # Hyperscale DC sits on the mobile user's regional grid unless the
+        # operator buys hourly-matched renewables (carbon-free scenario).
+        ci_hyper = jnp.where(cfree, CARBON_FREE_CI, mtrace.ci_hourly[hour])
+        interf, net = scenario_multipliers(var)
+
+        def localize(infra):
+            if eloc == Grid.RURAL:
+                # Geographical trade-off (§3.2): farther, greener edge.
+                return infra.replace(
+                    net_lat=infra.net_lat + jnp.asarray(
+                        [RURAL_EXTRA_EDGE_LATENCY_S, 0.0], jnp.float32))
+            return infra
+
+        env_list.append(Environment(
+            ci=jnp.stack([jnp.asarray(ci_mobile, jnp.float32),
+                          jnp.asarray(ci_edge, jnp.float32),
+                          jnp.asarray(ci_edge, jnp.float32),
+                          jnp.asarray(ci_core, jnp.float32),
+                          jnp.asarray(ci_hyper, jnp.float32)]),
+            interference=interf,
+            net_slowdown=net,
+        ))
+        infra_list.append(localize(packed[emb]))
+        if packed_jet is not None:
+            jet_list.append(localize(packed_jet[emb]))
+        rows.append(dict(charging=ChargingBehavior(charging).name,
+                         mobile_grid=Grid(mgrid).name,
+                         edge_location=Grid(eloc).name,
+                         dc_carbon_free=bool(cfree), embodied=emb,
+                         variance=VarianceScenario(var).name, hour=int(hour)))
+
+    stack = lambda xs: jax.tree.map(lambda *a: jnp.stack(a), *xs)
+    return ScenarioTable(rows=rows, envs=stack(env_list),
+                         infras=stack(infra_list),
+                         infras_jetson=(stack(jet_list) if jet_list
+                                        else None))
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpaceResult:
+    """Exploration output over (workload, scenario, target)."""
+
+    workload_names: list[str]
+    rows: list[dict]
+    total_cf: np.ndarray  # (n_workloads, n_scenarios, 3) grams
+    op_cf: np.ndarray  # (n_workloads, n_scenarios, 3)
+    emb_cf: np.ndarray  # (n_workloads, n_scenarios, 3)
+    energy_j: np.ndarray  # (n_workloads, n_scenarios, 3)
+    latency: np.ndarray  # (n_workloads, n_scenarios, 3)
+    feasible: np.ndarray  # (n_workloads, n_scenarios, 3) bool
+    carbon_opt: np.ndarray  # (n_workloads, n_scenarios) argmin target
+    energy_opt: np.ndarray
+    latency_opt: np.ndarray
+
+    @property
+    def n_points(self) -> int:
+        return int(np.prod(self.total_cf.shape))
+
+
+@jax.jit
+def _explore_one(w: Workload, avail: jax.Array, infra: InfraParams,
+                 env: Environment):
+    b = carbon_model.evaluate(w, infra, env)
+    ok = carbon_model.feasible(b, w)
+    energy = carbon_model.evaluate_energy(w, infra, env)
+    pick = lambda score: carbon_model.pick_target(score, ok, b.total_cf, avail)
+    return (b.total_cf, b.op_total, b.emb_total, energy, b.latency, ok & avail,
+            pick(b.total_cf), pick(energy), pick(b.latency))
+
+
+def explore(infos: Sequence[WorkloadInfo], table: ScenarioTable) -> DesignSpaceResult:
+    """Evaluate every (workload x scenario x target) cell in one vmapped pass."""
+    ws = stack_workloads(tuple(infos))
+    avail = jnp.stack([i.avail_mask for i in infos])
+    # per-workload client device (paper §4.2: AR/VR runs on the Jetson)
+    if table.infras_jetson is not None:
+        is_jet = jnp.asarray([i.device == "jetson" for i in infos])
+        infras = jax.vmap(
+            lambda j: jax.tree.map(
+                lambda a, b: jnp.where(j, a, b),
+                table.infras_jetson, table.infras))(is_jet)
+        infra_axes = 0  # leading workload axis
+    else:
+        infras = table.infras
+        infra_axes = None
+    # vmap over scenarios (axis 0 of envs/infras), then over workloads.
+    per_scenario = jax.vmap(_explore_one, in_axes=(None, None, 0, 0))
+    per_workload = jax.vmap(per_scenario,
+                            in_axes=(0, 0, infra_axes, None))
+    (total, op, emb, energy, lat, ok, copt, eopt, lopt) = jax.jit(per_workload)(
+        ws, avail, infras, table.envs)
+    return DesignSpaceResult(
+        workload_names=[i.name for i in infos],
+        rows=table.rows,
+        total_cf=np.asarray(total),
+        op_cf=np.asarray(op),
+        emb_cf=np.asarray(emb),
+        energy_j=np.asarray(energy),
+        latency=np.asarray(lat),
+        feasible=np.asarray(ok),
+        carbon_opt=np.asarray(copt),
+        energy_opt=np.asarray(eopt),
+        latency_opt=np.asarray(lopt),
+    )
+
+
+def scenario_mask(rows: list[dict], **conds) -> np.ndarray:
+    """Boolean mask over scenarios matching all host-side conditions."""
+    mask = np.ones(len(rows), dtype=bool)
+    for k, v in conds.items():
+        mask &= np.asarray([r[k] == v for r in rows])
+    return mask

@@ -1,0 +1,336 @@
+"""Edge-cloud infrastructure specifications (paper §2, §4.2, Tables 7-8).
+
+The paper measures latency/power on real hardware (Pixel 3, Jetson AGX,
+p3.2xlarge/V100, p4d.24xlarge/8xA100, macro base stations, core routers).
+Offline we reconstruct the same quantities analytically from published device
+specifications, with per-tier *efficiency factors* calibrated so the paper's
+Fig-5 orderings reproduce (see tests/test_paper_validation.py).
+
+Two fleets are provided:
+
+  * ``paper_fleet()``  — the paper's exact device set (used by every figure
+    reproduction benchmark).
+  * ``tpu_fleet()``    — the TPU v5e edge/cloud fleet used when GreenScale is
+    applied to the assigned LM architectures (descriptors from the dry-run).
+
+All specs are packed into flat jnp-array pytrees (``InfraParams``) so the
+carbon model is a pure jittable function of arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import (
+    ACT_OVER_LCA_RATIO,
+    SECONDS_PER_YEAR,
+    TPU_V5E_PEAK_BF16_FLOPS,
+    TPU_V5E_TDP_W,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeSpec:
+    """One compute tier (mobile device / edge DC server / hyperscale DC server)."""
+
+    name: str
+    #: effective FLOP/s sustained on NN-style work (not peak; includes framework
+    #: overheads — calibrated against the paper's latency observations).
+    eff_flops: float
+    #: sustained memory bandwidth (bytes/s) — used for memory-bound workloads.
+    eff_mem_bw: float
+    p_comp: float  # W while computing
+    p_comm: float  # W while transmitting (client devices; 0 for servers)
+    p_idle: float  # W while idle
+    ecf_lca_g: float  # embodied CF per LCA reports, grams CO2e
+    lifetime_s: float
+    pue: float = 1.0  # power usage effectiveness multiplier (DCs)
+    #: explicit ACT bottom-up estimate (repro.core.embodied); None -> the
+    #: paper's reported average 28% ACT-under-LCA gap.
+    ecf_act_override_g: float | None = None
+
+    @property
+    def ecf_act_g(self) -> float:
+        """ACT estimate — paper §4.3: ACT is ~28% below LCA reports."""
+        if self.ecf_act_override_g is not None:
+            return self.ecf_act_override_g
+        return self.ecf_lca_g * ACT_OVER_LCA_RATIO
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """One network component (base station or core-router path)."""
+
+    name: str
+    bandwidth_bps: float  # per-user achievable throughput
+    base_latency_s: float  # propagation + protocol latency floor
+    p_active: float  # W while carrying traffic (whole unit)
+    n_user: float  # concurrent users sharing the unit
+    ecf_lca_g: float
+    lifetime_s: float
+
+    @property
+    def ecf_act_g(self) -> float:
+        return self.ecf_lca_g * ACT_OVER_LCA_RATIO
+
+
+@dataclasses.dataclass(frozen=True)
+class Fleet:
+    """A full edge-cloud deployment: 3 compute tiers + 2 network components.
+
+    ``mobile_arvr``: the paper's AR/VR workloads run on a Jetson AGX Xavier
+    instead of the Pixel 3 (paper §4.2 / Table 7) — a second device spec for
+    that workload category.
+    """
+
+    mobile: ComputeSpec
+    edge_dc: ComputeSpec
+    hyper_dc: ComputeSpec
+    edge_net: NetworkSpec  # base station (macro BS) / WiFi AP
+    core_net: NetworkSpec  # multi-hop core-router path
+    mobile_arvr: ComputeSpec | None = None  # Jetson AGX (AR/VR workloads)
+    # Sharing populations (paper Table 2): users amortizing idle + embodied CF.
+    n_user_edge: float = 32.0  # N_user_E  — users per edge-DC server
+    n_user_dc: float = 512.0  # N_user_DC — users per hyperscale-DC server
+    n_batch_dc: float = 64.0  # N_B       — users batched together in the DC
+
+
+# ------------------------------------------------------------------------------
+# Paper fleet (Tables 7-8 + §4.2)
+# ------------------------------------------------------------------------------
+
+
+def paper_fleet() -> Fleet:
+    """The paper's measured infrastructure, reconstructed analytically.
+
+    The paper published device specs (Tables 7-8) but not the measured
+    latency/power values its figures rest on, so these constants were
+    CALIBRATED: tools/calibrate_fleet_fast.py + tools/calibrate_ga.py
+    search physically-bounded ranges for a set satisfying all 29
+    qualitative Fig-5..11 claims (29/29 achieved; scorecard in
+    EXPERIMENTS.md §Paper-validation and tests/test_paper_validation.py).
+    Sources for the bounds (in brackets):
+      * Pixel 3 / Snapdragon 845: sustained mixed-delegate NN throughput
+        ~39 GFLOP/s nominal (per-network DSP speedups live on the
+        workload, Workload.mobile_eff_scale) [Table 7; refs 70,71].
+      * Jetson AGX Xavier (AR/VR device, paper §4.2): Volta iGPU sustained
+        ~0.83 TFLOP/s, ~41 GB/s, ~10 W hot [Table 7].
+      * p3.2xlarge (V100): inference-sustained ~0.73 TFLOP/s at the small
+        interactive batches an edge DC sees; PUE 1.5 [18,36].
+      * p4d.24xlarge (8xA100): batched sustained 30 TFLOP/s server-level;
+        7 kW active / 0.7 kW idle; PUE 1.1 [45,82].
+      * Macro BS ~1.16 kW across ~1500 users [49]; LTE per-user ~145 Mbit/s
+        effective 18.1 MB/s, 4.1 ms radio latency.
+      * Core-router path: 80 MB/s per-user bottleneck, 13.4 ms, 10 kW per
+        ~40k flows [19,20,61].
+      * Embodied: Pixel 3 PER [48], Dell R740 LCA [21], BS/router LCA
+        [27-30,19,20]. ACT = 0.72 x LCA [51].
+    """
+    mobile = ComputeSpec(
+        name="pixel3",
+        eff_flops=39.049e9,
+        eff_mem_bw=24.084e9,
+        p_comp=3.797,
+        p_comm=1.067,
+        p_idle=0.4845,
+        ecf_lca_g=5000.0 / ACT_OVER_LCA_RATIO,
+        lifetime_s=3 * SECONDS_PER_YEAR,
+    )
+    jetson = ComputeSpec(
+        name="jetson-agx-xavier",
+        eff_flops=825.6e9,
+        eff_mem_bw=40.93e9,
+        p_comp=10.0,
+        p_comm=1.067,
+        p_idle=0.4845,
+        ecf_lca_g=21065.6 / ACT_OVER_LCA_RATIO,
+        lifetime_s=3 * SECONDS_PER_YEAR,
+    )
+    edge_dc = ComputeSpec(
+        name="p3.2xlarge-v100",
+        eff_flops=0.7281e12,
+        eff_mem_bw=300e9,
+        p_comp=693.5,
+        p_comm=0.0,
+        p_idle=15.0,
+        ecf_lca_g=1.0e6 / ACT_OVER_LCA_RATIO,
+        lifetime_s=4 * SECONDS_PER_YEAR,
+        pue=1.5,
+    )
+    hyper_dc = ComputeSpec(
+        name="p4d.24xlarge-a100x8",
+        eff_flops=30e12,  # server-level batched sustained; shared via N_B
+        eff_mem_bw=1.2e12,
+        p_comp=7000.0,  # whole server; divided by N_B per user
+        p_comm=0.0,
+        p_idle=700.0,
+        ecf_lca_g=3.0e6 / ACT_OVER_LCA_RATIO,
+        lifetime_s=4 * SECONDS_PER_YEAR,
+        pue=1.1,
+    )
+    edge_net = NetworkSpec(
+        name="macro-bs",
+        bandwidth_bps=18.14e6,
+        base_latency_s=0.00408,
+        p_active=1161.2,
+        n_user=1500.0,
+        ecf_lca_g=25e6,
+        lifetime_s=8 * SECONDS_PER_YEAR,
+    )
+    core_net = NetworkSpec(
+        name="core-router-path",
+        bandwidth_bps=80.62e6,
+        base_latency_s=0.013408,
+        p_active=10000.0,
+        n_user=40000.0,
+        ecf_lca_g=18e6,
+        lifetime_s=6 * SECONDS_PER_YEAR,
+    )
+    return Fleet(mobile=mobile, edge_dc=edge_dc, hyper_dc=hyper_dc,
+                 edge_net=edge_net, core_net=core_net, mobile_arvr=jetson,
+                 n_user_edge=62.54, n_user_dc=4096.0, n_batch_dc=16.0)
+
+
+def tpu_fleet() -> Fleet:
+    """TPU v5e edge/cloud fleet for LM workloads (beyond-paper integration).
+
+    Tier mapping: on-device NPU (phone-class SoC), edge-DC v5e-8 slice, and a
+    hyperscale v5e-256 pod. Effective FLOP/s assume the MFU we report in
+    EXPERIMENTS.md §Roofline (~0.4-0.6 on LM shapes).
+    """
+    mobile = ComputeSpec(
+        name="device-npu",
+        eff_flops=4e12,  # phone-class NPU sustained int8/bf16-equivalent
+        eff_mem_bw=60e9,
+        p_comp=6.0,
+        p_comm=2.0,
+        p_idle=1.0,
+        ecf_lca_g=60e3,
+        lifetime_s=3 * SECONDS_PER_YEAR,
+    )
+    edge_dc = ComputeSpec(
+        name="v5e-8-slice",
+        eff_flops=8 * TPU_V5E_PEAK_BF16_FLOPS * 0.45,
+        eff_mem_bw=8 * 819e9,
+        p_comp=8 * TPU_V5E_TDP_W + 400.0,
+        p_comm=0.0,
+        p_idle=8 * 60.0 + 200.0,
+        ecf_lca_g=6.0e6,
+        lifetime_s=4 * SECONDS_PER_YEAR,
+        pue=1.4,
+    )
+    hyper_dc = ComputeSpec(
+        name="v5e-256-pod",
+        eff_flops=256 * TPU_V5E_PEAK_BF16_FLOPS * 0.55,
+        eff_mem_bw=256 * 819e9,
+        p_comp=256 * TPU_V5E_TDP_W + 8000.0,
+        p_comm=0.0,
+        p_idle=256 * 60.0 + 4000.0,
+        ecf_lca_g=256 * 0.9e6,
+        lifetime_s=4 * SECONDS_PER_YEAR,
+        pue=1.1,
+    )
+    edge_net = NetworkSpec(
+        name="5g-bs",
+        bandwidth_bps=200e6,
+        base_latency_s=0.008,
+        p_active=1200.0,
+        n_user=250.0,
+        ecf_lca_g=25e6,
+        lifetime_s=8 * SECONDS_PER_YEAR,
+    )
+    core_net = NetworkSpec(
+        name="core-router-path",
+        bandwidth_bps=400e6,
+        base_latency_s=0.018,
+        p_active=10000.0,
+        n_user=40000.0,
+        ecf_lca_g=18e6,
+        lifetime_s=6 * SECONDS_PER_YEAR,
+    )
+    return Fleet(mobile=mobile, edge_dc=edge_dc, hyper_dc=hyper_dc,
+                 edge_net=edge_net, core_net=core_net,
+                 n_user_edge=16.0, n_user_dc=2048.0, n_batch_dc=256.0)
+
+
+# ------------------------------------------------------------------------------
+# Packed array form for the jitted carbon model
+# ------------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class InfraParams:
+    """Flat array pytree of everything the Table-1 model needs.
+
+    Scalars are 0-d jnp arrays so the whole struct vmaps/jits cleanly and a
+    *batch* of scenarios can be expressed by stacking leading axes.
+    """
+
+    # compute tiers, indexed [mobile, edge_dc, hyper_dc]
+    eff_flops: jax.Array  # (3,)
+    eff_mem_bw: jax.Array  # (3,)
+    p_comp: jax.Array  # (3,)  (PUE already folded in for DCs)
+    p_idle: jax.Array  # (3,)
+    p_comm_mobile: jax.Array  # ()
+    ecf_g: jax.Array  # (3,)  embodied CF per tier (ACT or LCA)
+    lifetime_s: jax.Array  # (3,)
+    # networks, indexed [edge_net, core_net]
+    net_bw: jax.Array  # (2,)
+    net_lat: jax.Array  # (2,)
+    net_p: jax.Array  # (2,)
+    net_n_user: jax.Array  # (2,)
+    net_ecf_g: jax.Array  # (2,)
+    net_lifetime_s: jax.Array  # (2,)
+    # sharing populations
+    n_user_edge: jax.Array  # ()
+    n_user_dc: jax.Array  # ()
+    n_batch_dc: jax.Array  # ()
+
+    def replace(self, **kw) -> "InfraParams":
+        return dataclasses.replace(self, **kw)
+
+
+def pack_infra(fleet: Fleet, embodied_model: str = "act",
+               device: str = "phone") -> InfraParams:
+    """Pack a Fleet into InfraParams. embodied_model: 'act' | 'lca'.
+
+    ``device``: 'phone' | 'jetson' — which mobile spec fills tier 0
+    (the paper runs AR/VR on a Jetson AGX, §4.2)."""
+    mobile = fleet.mobile
+    if device == "jetson":
+        if fleet.mobile_arvr is None:
+            raise ValueError("fleet has no Jetson (mobile_arvr) spec")
+        mobile = fleet.mobile_arvr
+    elif device != "phone":
+        raise ValueError(f"unknown device {device!r}")
+    tiers = (mobile, fleet.edge_dc, fleet.hyper_dc)
+    nets = (fleet.edge_net, fleet.core_net)
+    if embodied_model not in ("act", "lca"):
+        raise ValueError(f"unknown embodied model: {embodied_model!r}")
+    ecf = [t.ecf_act_g if embodied_model == "act" else t.ecf_lca_g for t in tiers]
+    # Paper §4.3: ACT does not model networking components (transceivers);
+    # base stations and routers always use the LCA reports.
+    net_ecf = [n.ecf_lca_g for n in nets]
+    f = jnp.asarray
+    return InfraParams(
+        eff_flops=f([t.eff_flops for t in tiers]),
+        eff_mem_bw=f([t.eff_mem_bw for t in tiers]),
+        p_comp=f([t.p_comp * t.pue for t in tiers]),
+        p_idle=f([t.p_idle * t.pue for t in tiers]),
+        p_comm_mobile=f(fleet.mobile.p_comm),
+        ecf_g=f(ecf),
+        lifetime_s=f([t.lifetime_s for t in tiers]),
+        net_bw=f([n.bandwidth_bps for n in nets]),
+        net_lat=f([n.base_latency_s for n in nets]),
+        net_p=f([n.p_active for n in nets]),
+        net_n_user=f([n.n_user for n in nets]),
+        net_ecf_g=f(net_ecf),
+        net_lifetime_s=f([n.lifetime_s for n in nets]),
+        n_user_edge=f(fleet.n_user_edge),
+        n_user_dc=f(fleet.n_user_dc),
+        n_batch_dc=f(fleet.n_batch_dc),
+    )

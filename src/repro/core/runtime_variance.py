@@ -1,0 +1,100 @@
+"""Runtime variance models (paper §3.2 "Runtime variance" + §4.3 + §5.3).
+
+Two families of stochastic disturbance, each expressed as multiplicative
+slowdowns consumed by ``Environment``:
+
+  * **Co-located workload interference** — slows computation per tier.  The
+    adverse impact shrinks with the tier's compute/memory headroom (paper
+    §5.3: "DC has the largest computation and memory capabilities", so the
+    carbon-optimal target shifts *to* the DC under interference).
+  * **Network instability** — weak wireless signal in the edge network (43%
+    of data is transmitted under weak signal, paper ref [22]) and congestion
+    /queueing in the core network [10,12,61,62].  Both slow communication and
+    shift the optimum back toward Mobile.
+
+Deterministic scenario presets reproduce the paper's figures; the stochastic
+samplers power the RL scheduler's training environment and the property
+tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+
+
+class VarianceScenario(enum.IntEnum):
+    NONE = 0
+    COLOCATED = 1  # co-located workloads on every compute tier
+    UNSTABLE_EDGE = 2  # weak wireless signal
+    UNSTABLE_CORE = 3  # congested core network
+
+
+#: Deterministic per-scenario multipliers, calibrated to the paper's Fig 10
+#: (tools/calibrate_ga.py, jointly with paper_fleet()): under co-location the
+#: optimum shifts Edge DC -> DC (mobile suffers most, DC least); under
+#: network instability it shifts -> Mobile.
+_INTERFERENCE = {
+    VarianceScenario.NONE: (1.0, 1.0, 1.0),
+    VarianceScenario.COLOCATED: (4.126, 2.820, 1.188),
+    VarianceScenario.UNSTABLE_EDGE: (1.0, 1.0, 1.0),
+    VarianceScenario.UNSTABLE_CORE: (1.0, 1.0, 1.0),
+}
+_NET_SLOWDOWN = {
+    VarianceScenario.NONE: (1.0, 1.0),
+    VarianceScenario.COLOCATED: (1.0, 1.0),
+    VarianceScenario.UNSTABLE_EDGE: (8.0, 1.0),
+    VarianceScenario.UNSTABLE_CORE: (1.0, 6.0),
+}
+
+
+def scenario_multipliers(s: VarianceScenario | int) -> tuple[jax.Array, jax.Array]:
+    s = VarianceScenario(int(s))
+    return (jnp.asarray(_INTERFERENCE[s], jnp.float32),
+            jnp.asarray(_NET_SLOWDOWN[s], jnp.float32))
+
+
+def all_scenario_multipliers() -> tuple[jax.Array, jax.Array]:
+    """Stacked (n_scenarios, 3) interference and (n_scenarios, 2) slowdowns."""
+    interf = jnp.stack([scenario_multipliers(s)[0] for s in VarianceScenario])
+    net = jnp.stack([scenario_multipliers(s)[1] for s in VarianceScenario])
+    return interf, net
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StochasticVariance:
+    """Parameters of the random-disturbance model (lognormal slowdowns).
+
+    ``sigma_comp`` per-tier lognormal sigma of the interference multiplier;
+    ``p_weak``     probability a request sees weak wireless signal [22];
+    ``weak_scale`` edge slowdown under weak signal;
+    ``sigma_core`` lognormal sigma of core-network queueing delay.
+    """
+
+    sigma_comp: jax.Array  # (3,)
+    p_weak: jax.Array  # ()
+    weak_scale: jax.Array  # ()
+    sigma_core: jax.Array  # ()
+
+    @staticmethod
+    def default() -> "StochasticVariance":
+        return StochasticVariance(
+            sigma_comp=jnp.asarray([0.35, 0.20, 0.06], jnp.float32),
+            p_weak=jnp.asarray(0.43, jnp.float32),  # paper ref [22]
+            weak_scale=jnp.asarray(3.2, jnp.float32),
+            sigma_core=jnp.asarray(0.25, jnp.float32),
+        )
+
+
+def sample(key: jax.Array, sv: StochasticVariance) -> tuple[jax.Array, jax.Array]:
+    """One draw of (interference (3,), net_slowdown (2,)), each >= 1."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    interf = jnp.exp(jnp.abs(jax.random.normal(k1, (3,))) * sv.sigma_comp)
+    weak = jax.random.bernoulli(k2, sv.p_weak)
+    edge = jnp.where(weak, sv.weak_scale, 1.0)
+    core = jnp.exp(jnp.abs(jax.random.normal(k3, ())) * sv.sigma_core)
+    return interf, jnp.stack([edge, core])

@@ -1,0 +1,3 @@
+"""Deterministic synthetic LM data pipeline (shard-aware)."""
+
+from repro.data.pipeline import SyntheticLM, batch_for

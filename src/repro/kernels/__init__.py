@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
+
+Kernels: flash attention (causal/GQA/SWA), chunked SSD scan (mamba2),
+grouped expert matmul (MoE), fused RMSNorm. Use via repro.kernels.ops —
+the wrappers pick valid block shapes and fall back to interpret mode
+off-TPU. Oracles in repro.kernels.ref are the allclose targets.
+"""

@@ -1,0 +1,97 @@
+"""Public kernel API: shape/layout adaptation around the raw Pallas calls.
+
+Each wrapper picks hardware-valid block shapes, prepares layouts, and falls
+back to ``interpret=True`` automatically off-TPU (this container is CPU-only;
+the kernels execute in the Pallas interpreter for correctness validation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_matmul as _mm
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _fit_block(size: int, want: int) -> int:
+    """Largest divisor of ``size`` that is <= want (>=1)."""
+    b = min(want, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """GQA flash attention. q (B,Sq,H,D); k/v (B,Sk,Hkv,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bq = _fit_block(q.shape[1], block_q)
+    bk = _fit_block(k.shape[1], block_k)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, D: jax.Array, *, chunk: int = 128,
+             initial_state: jax.Array | None = None,
+             block_h: int = 8,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan matching repro.models.mamba2.ssd_chunked's contract.
+
+    x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N), D (H,).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    Bsz, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    hpg = H // G
+    L = _fit_block(S, chunk)
+    nc = S // L
+    bh = _fit_block(H, block_h)
+
+    xc = x.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    # broadcast group streams to heads (kernel tiles over heads)
+    Bh = jnp.repeat(B, hpg, axis=2).reshape(Bsz, nc, L, H, N)
+    Ch = jnp.repeat(C, hpg, axis=2).reshape(Bsz, nc, L, H, N)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    y, sf = _ssd.ssd_scan_chunked(xc, dtc, A, Bh, Ch, D, s0,
+                                  block_h=bh, interpret=interpret)
+    return y.reshape(Bsz, S, H, P), sf
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+                   block_f: int = 128, block_d: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    """Per-expert matmul (E,C,d) @ (E,d,f) -> (E,C,f)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    E, C, d = x.shape
+    f = w.shape[-1]
+    return _mm.grouped_matmul(
+        x, w,
+        block_c=_fit_block(C, block_c),
+        block_f=_fit_block(f, block_f),
+        block_d=_fit_block(d, block_d),
+        interpret=interpret)
+
+
+def fused_rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+                  block_rows: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _rn.fused_rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                             interpret=interpret)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the *simplest correct* implementations — sequential
+scans, dense masks, full-precision math — so kernel tests compare against
+something auditable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """Dense-mask GQA attention. q (B,Sq,H,D); k/v (B,Sk,Hkv,D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, groups, D).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(D)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array, D: jax.Array,
+            initial_state: jax.Array | None = None,
+            ) -> tuple[jax.Array, jax.Array]:
+    """Sequential (token-by-token) SSD recurrence — the ground truth.
+
+    x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N), D (H,).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;  y_t = C_t . h_t + D x_t.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    hpg = H // G
+    f32 = jnp.float32
+    x_, dt_ = x.astype(f32), dt.astype(f32)
+    B_ = jnp.repeat(B.astype(f32), hpg, axis=2)  # (B,S,H,N)
+    C_ = jnp.repeat(C.astype(f32), hpg, axis=2)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        dA = jnp.exp(dtt * A.astype(f32))  # (B,H)
+        h = h * dA[..., None, None] + (dtt[..., None, None]
+                                       * xt[..., None] * Bt[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    h0 = (jnp.zeros((Bsz, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x_, 1, 0), jnp.moveaxis(dt_, 1, 0),
+         jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P)
+    y = y + x_ * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hT
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-expert matmul. x (E,C,d), w (E,d,f) -> (E,C,f), fp32 accumulate."""
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis, fp32 internals."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

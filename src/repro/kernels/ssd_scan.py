@@ -1,0 +1,123 @@
+"""Chunked SSD (Mamba-2 state-space duality) scan as a Pallas TPU kernel.
+
+TPU adaptation of the paper's GPU algorithm (arXiv:2405.21060 §7):
+  * The chunk dimension maps to the *sequential* last grid axis; the running
+    (heads, P, N) SSM state lives in fp32 VMEM scratch across chunk steps —
+    this replaces the GPU's separate state-passing kernel launch with a
+    single fused pass (no HBM round-trip for inter-chunk states).
+  * Within a chunk, the duality's (L x L) lower-triangular "attention" is
+    materialized per head-block in VMEM; L defaults to 128 so the C.B^T and
+    the two (L x L)@(L x P) contractions are MXU-aligned.
+  * Heads are blocked (block_h) so the working set — x tile (L, hb, P),
+    decay tile (L, L, hb), state (hb, P, N) — fits VMEM for any config in
+    the pool.
+
+Layout contract (ops.py prepares it): x (B, nc, L, H, P), dt (B, nc, L, H),
+B/C group-broadcast to heads (B, nc, L, H, N), state0 (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, s0_ref,
+                y_ref, sf_ref, state_scr, *, L: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)  # (hb, P, N)
+
+    f32 = jnp.float32
+    x = x_ref[0, 0].astype(f32)   # (L, hb, P)
+    dt = dt_ref[0, 0].astype(f32)  # (L, hb)
+    Bm = b_ref[0, 0].astype(f32)  # (L, hb, N)
+    Cm = c_ref[0, 0].astype(f32)  # (L, hb, N)
+    A = a_ref[...].astype(f32)    # (hb,)
+    D = d_ref[...].astype(f32)    # (hb,)
+
+    a = dt * A[None, :]                      # (L, hb) log-decay
+    a_cum = jnp.cumsum(a, axis=0)            # inclusive
+
+    # --- intra-chunk: y_intra[i] = sum_{j<=i} (C_i.B_j) decay(i,j) dt_j x_j
+    seg = a_cum[:, None, :] - a_cum[None, :, :]          # (L, L, hb)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("ihs,jhs->ijh", Cm, Bm,
+                    preferred_element_type=f32)          # (L, L, hb)
+    w = cb * decay * dt[None, :, :]
+    y = jnp.einsum("ijh,jhp->ihp", w, x, preferred_element_type=f32)
+
+    # --- inter-chunk: contribution of the state entering this chunk
+    state = state_scr[...]                               # (hb, P, N)
+    y += jnp.einsum("ihs,hps->ihp", Cm, state,
+                    preferred_element_type=f32) * jnp.exp(a_cum)[:, :, None]
+
+    # --- state update: decay full chunk + deposit
+    decay_to_end = jnp.exp(a_cum[-1][None, :] - a_cum)   # (L, hb)
+    deposit = jnp.einsum("lhs,lhp->hps", Bm, x * (dt * decay_to_end)[..., None],
+                         preferred_element_type=f32)
+    state_scr[...] = state * jnp.exp(a_cum[-1])[:, None, None] + deposit
+
+    y_ref[0, 0] = (y + x * D[None, :, None]).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        sf_ref[0] = state_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_h", "interpret"))
+def ssd_scan_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                     Bh: jax.Array, Ch: jax.Array, D: jax.Array,
+                     state0: jax.Array, *, block_h: int = 8,
+                     interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Pre-chunked SSD scan.
+
+    x (B,nc,L,H,P), dt (B,nc,L,H), Bh/Ch (B,nc,L,H,N) (already head-
+    broadcast), A/D (H,), state0 (B,H,P,N) ->
+    (y (B,nc,L,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, nc, L, H, P = x.shape
+    N = Bh.shape[-1]
+    assert H % block_h == 0, (H, block_h)
+    nh = H // block_h
+
+    kernel = functools.partial(_ssd_kernel, L=L, nc=nc)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(Bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, block_h, P),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, block_h),
+                         lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, L, block_h, N),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, block_h, N),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((block_h,), lambda b, h, c: (h,)),
+            pl.BlockSpec((block_h,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, block_h, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, block_h, P),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, block_h, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nc, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bh, Ch, A, D, state0)
+    return y, sf

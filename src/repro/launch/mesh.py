@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its first
+jax call, and nothing here may run earlier.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips).
+
+    Axes: DP over ("pod", "data"), TP/EP over "model".
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(n_data: int, n_model: int, n_pod: int = 1) -> jax.sharding.Mesh:
+    """Arbitrary mesh for tests / elastic reconfigurations."""
+    if n_pod > 1:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n != "model")

@@ -1,0 +1,19 @@
+"""Model zoo: one composable definition covering the whole architecture pool."""
+
+from repro.models.transformer import (
+    DecodeState,
+    count_params,
+    decode_step,
+    encode,
+    forward,
+    init_decode_state,
+    init_params,
+    layer_kinds,
+    loss_fn,
+    param_bytes,
+    prefill,
+)
+from repro.models.attention import KVCache, init_kv_cache
+from repro.models.mamba2 import SSMState, init_ssm_state
+
+__all__ = [k for k in dir() if not k.startswith("_")]

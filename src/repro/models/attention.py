@@ -1,0 +1,268 @@
+"""Grouped-query attention with causal / sliding-window masking and KV cache.
+
+The jnp path here is the reference implementation that XLA compiles for the
+dry-run (so cost_analysis attributes FLOPs correctly); ``use_pallas=True`` at
+the model level swaps the core ``sdpa`` for the Pallas flash-attention kernel
+(repro.kernels) on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, dense_init
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(params: dict, cfg: ModelConfig, x: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, q, k, positions):
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _sdpa_dense(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal: bool, window: int | None = None,
+                q_offset: jax.Array | int = 0) -> jax.Array:
+    """Dense-mask attention (materializes the (Sq, Sk) scores)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, groups, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+
+    q_pos = jnp.arange(Sq) + q_offset  # (Sq,)
+    k_pos = jnp.arange(k.shape[1])  # (Sk,)
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         causal: bool, window: int | None = None,
+         q_offset: jax.Array | int = 0,
+         block_q: int | None = None) -> jax.Array:
+    """Scaled dot-product attention with GQA broadcast.
+
+    q (B,Sq,H,D); k/v (B,Sk,Hkv,D). ``q_offset`` is the absolute position of
+    q[0] relative to k[0] (decode: offset = cache length).
+    ``window``: sliding-window width (keys within [pos-window+1, pos]).
+
+    ``block_q``: when set and Sq is large, queries stream through a
+    ``lax.scan`` in blocks of ``block_q`` rows, so only one (B, H, block_q,
+    k_range) score tile is live at a time — the memory-bounded XLA analogue
+    of the Pallas flash kernel. The scan (vs an unrolled loop) is what forces
+    buffer reuse: XLA's scheduler keeps independent unrolled tiles alive
+    simultaneously. SWA additionally bounds k_range to window+block via a
+    rolling dynamic slice. Causal-without-window pays ~2x masked FLOPs in
+    this XLA path (a while-loop cannot shrink per-iteration shapes); the
+    Pallas kernel on real TPUs skips those tiles — noted in EXPERIMENTS.md.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if window is not None and window >= Sk:
+        window = None  # SWA window covers the whole sequence: plain causal
+    if (block_q is None or Sq <= 2 * block_q or Sq % block_q
+            or not isinstance(q_offset, int) or q_offset != 0):
+        return _sdpa_dense(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+
+    nq = Sq // block_q
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    q_blocks = q.reshape(B, nq, block_q, H, D).swapaxes(0, 1)
+
+    if window is not None:
+        # banded SWA: block i sees keys [i*bq - pad, i*bq + bq); pad rounds
+        # the window up to a block multiple so the slice size is static.
+        pad = ((window - 1 + block_q - 1) // block_q) * block_q
+        k_pad = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        span = pad + block_q
+
+        def blk(_, iq):
+            start = iq * block_q  # offset into padded keys
+            kb = jax.lax.dynamic_slice_in_dim(k_pad, start, span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v_pad, start, span, axis=1)
+            qb = q_blocks[iq]
+            qg = qb.reshape(B, block_q, Hkv, groups, D)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32)
+            s = s * scale
+            q_pos = iq * block_q + jnp.arange(block_q)
+            k_pos = start - pad + jnp.arange(span)  # absolute key positions
+            m = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos[:, None])
+            m &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(m[None, None, None], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vb)
+            return None, o.reshape(B, block_q, H, D)
+
+        _, outs = jax.lax.scan(blk, None, jnp.arange(nq))
+    else:
+
+        def blk(_, iq):
+            qb = q_blocks[iq]
+            qg = qb.reshape(B, block_q, Hkv, groups, D)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+            s = s * scale
+            q_pos = iq * block_q + jnp.arange(block_q)
+            k_pos = jnp.arange(Sk)
+            m = jnp.ones((block_q, Sk), bool)
+            if causal:
+                m = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(m[None, None, None], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+            return None, o.reshape(B, block_q, H, D)
+
+        _, outs = jax.lax.scan(blk, None, jnp.arange(nq))
+
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, D)
+
+
+def attention(params: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """Full self-attention over x (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x)
+    q, k = _rope(cfg, q, k, positions)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   window=cfg.sliding_window)
+    else:
+        out = sdpa(q, k, v, causal=True, window=cfg.sliding_window,
+                   block_q=cfg.attn_block_q)
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer KV cache. For SWA layers the buffer is the window size and
+    written round-robin; for full attention it is the max sequence length."""
+
+    k: jax.Array  # (B, S_buf, Hkv, D)
+    v: jax.Array  # (B, S_buf, Hkv, D)
+    length: jax.Array  # () int32 — tokens seen so far
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    buf = max_seq if cfg.sliding_window is None else min(max_seq,
+                                                         cfg.sliding_window)
+    shape = (batch, buf, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def decode_attention(params: dict, cfg: ModelConfig, x: jax.Array,
+                     cache: KVCache) -> tuple[jax.Array, KVCache]:
+    """One-token decode step: x (B, 1, d_model) against the cache."""
+    B = x.shape[0]
+    pos = cache.length  # absolute position of the new token
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+    q, k = _rope(cfg, q, k, positions)
+
+    buf = cache.k.shape[1]
+    slot = pos % buf  # round-robin for SWA; == pos for full attention
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                slot, axis=1)
+
+    # Validity: ring slots written so far, and (for SWA) within the window.
+    k_idx = jnp.arange(buf)
+    if cfg.sliding_window is None:
+        valid = k_idx <= pos
+        k_pos = k_idx
+    else:
+        # slot i holds absolute position: the largest p <= pos with p%buf==i
+        k_pos = pos - ((pos - k_idx) % buf)
+        valid = (k_pos >= 0) & (k_pos > pos - cfg.sliding_window) & (k_pos <= pos)
+
+    Hkv, D = cfg.n_kv_heads, cfg.head_dim
+    H = cfg.n_heads
+    groups = H // Hkv
+    qg = q.reshape(B, 1, Hkv, groups, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, new_k.astype(q.dtype))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(D)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, new_v.astype(q.dtype))
+    out = out.reshape(B, 1, H * D) @ params["wo"]
+    return out, KVCache(k=new_k, v=new_v, length=pos + 1)
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Whisper-style cross-attention (no rope, kv from encoder memory)."""
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(params: dict, cfg: ModelConfig, x: jax.Array,
+                    memory_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """x (B,Sq,d) attends over precomputed encoder K/V (B,Sk,Hkv,D)."""
+    B, Sq, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    k, v = memory_kv
+    out = sdpa(q, k, v, causal=False)
+    return out.reshape(B, Sq, cfg.n_heads * hd) @ params["wo"]
+
+
+def memory_kv(params: dict, cfg: ModelConfig, memory: jax.Array):
+    """Precompute encoder K/V once per sequence (decode reuses them)."""
+    B, Sk, _ = memory.shape
+    hd = cfg.head_dim
+    k = (memory @ params["wk"]).reshape(B, Sk, cfg.n_kv_heads, hd)
+    v = (memory @ params["wv"]).reshape(B, Sk, cfg.n_kv_heads, hd)
+    return k, v

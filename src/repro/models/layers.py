@@ -1,0 +1,129 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, apply fns are
+    pure; all math in the config dtype with fp32 accumulation where it
+    matters (norms, softmax, losses).
+  * activations are (batch, seq, d_model) unless stated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    """He/Glorot-style truncated normal, stddev = scale."""
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (vocab, d), 1.0, dtype)
+
+
+# --- RMSNorm --------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)
+
+
+# --- SwiGLU MLP -------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]
+
+
+# --- Rotary position embeddings ---------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate (..., seq, heads, head_dim) by per-token positions (..., seq)."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: 3 position streams (t, h, w) own disjoint
+    channel sections of the rotary half-dim.
+
+    ``positions``: (3, ..., seq); ``sections`` sums to head_dim//2.
+    Text tokens carry identical t/h/w position ids, reducing to plain RoPE.
+    """
+    head_dim = x.shape[-1]
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv_freq = rope_frequencies(head_dim, theta)  # (hd/2,)
+    # Select which position stream drives each channel section.
+    sec_id = np.repeat(np.arange(3), np.asarray(sections))  # (hd/2,)
+    sec_onehot = jnp.asarray(np.eye(3)[sec_id], jnp.float32)  # (hd/2, 3)
+    # angles per stream: (3, ..., S, hd/2) -> pick stream per channel
+    angles_all = positions[..., None].astype(jnp.float32) * inv_freq
+    angles = jnp.einsum("t...k,kt->...k", angles_all, sec_onehot)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- Losses -----------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits (B,S,V), labels (B,S) int32.
+
+    The gold logit is extracted with a one-hot masked reduction instead of
+    take_along_axis: with vocab-parallel logits the reduction stays local
+    per shard + one psum, whereas a gather over the sharded vocab axis would
+    force GSPMD to all-gather the full (B,S,V) logits.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, V, dtype=jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

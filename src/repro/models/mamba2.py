@@ -1,0 +1,285 @@
+"""Mamba-2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+The sequence mixer for the ``ssm`` family (mamba2-780m) and the Mamba layers
+of the ``hybrid`` family (jamba; DESIGN.md notes the Mamba-1 -> SSD
+substitution).
+
+Three implementations of the core scan:
+  * ``repro.kernels.ref.ssd_reference`` — sequential lax.scan oracle;
+  * ``ssd_chunked`` (here) — the paper's chunked/blocked algorithm in pure
+    jnp, used by the models so the dry-run cost analysis sees real XLA ops;
+  * ``repro.kernels.ssd_scan`` — the Pallas TPU kernel (same chunking,
+    explicit VMEM tiles).
+
+Shapes: x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N) with G groups
+(G=1 here), D (H,). State: (B,H,P,N).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, D: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None,
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Within a chunk the recurrence is materialized as a (L x L) lower-
+    triangular "attention" (the duality); across chunks a cheap lax.scan
+    carries the (H,P,N) state. All internal math in fp32.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc, L = S // chunk, chunk
+    f32 = jnp.float32
+
+    x_ = x.reshape(Bsz, nc, L, H, P).astype(f32)
+    dt_ = dt.reshape(Bsz, nc, L, H).astype(f32)
+    B_ = B.reshape(Bsz, nc, L, G, N).astype(f32)
+    C_ = C.reshape(Bsz, nc, L, G, N).astype(f32)
+    hpg = H // G  # heads per group
+
+    a = dt_ * A.astype(f32)  # (B,nc,L,H) log-decay per step (A < 0)
+    a_cum = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+
+    # Broadcast group B/C streams to heads once (heads in a group share B/C).
+    Br_ = jnp.repeat(B_, hpg, axis=3)  # (B,nc,L,H,N)
+    Cr_ = jnp.repeat(C_, hpg, axis=3)  # (B,nc,L,H,N)
+
+    # --- intra-chunk (the "attention" form of the duality) -------------------
+    # decay(i,j) = exp(a_cum[i] - a_cum[j]) for i >= j (state deposited at j,
+    # read at i, decayed by steps j+1..i).
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # scores(i,j,h) = C_i . B_j per head
+    cb = jnp.einsum("bcihs,bcjhs->bcijh", Cr_, Br_)  # (B,nc,L,L,H)
+    w = cb * decay * dt_[:, :, None, :, :]  # weight x_j by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, x_)
+
+    # --- chunk states ----------------------------------------------------------
+    # state deposited by chunk c = sum_j exp(a_cum[last] - a_cum[j]) dt_j B_j x_j
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,L,H)
+    chunk_state = jnp.einsum(
+        "bclhs,bclhp->bchps", Br_, x_ * (dt_ * decay_to_end)[..., None])
+
+    # --- inter-chunk recurrence -------------------------------------------------
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B,nc,H) total decay per chunk
+
+    def step(carry, inp):
+        state_prev = carry  # (B,H,P,N)
+        cd, cs = inp  # (B,H), (B,H,P,N)
+        state = state_prev * cd[..., None, None] + cs
+        return state, state_prev  # emit state *entering* the chunk
+
+    init = (jnp.zeros((Bsz, H, P, N), f32) if initial_state is None
+            else initial_state.astype(f32))
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+
+    # y_inter[i] = C_i . (exp(a_cum[i]) * state_entering_chunk)
+    state_decay = jnp.exp(a_cum)  # (B,nc,L,H)
+    y_inter = jnp.einsum("bclhs,bchps->bclhp", Cr_, prev_states)
+    y_inter = y_inter * state_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), final_state.astype(f32)
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, D: jax.Array, state: jax.Array,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Single-token SSD update. x (B,H,P), dt (B,H), B/C (B,G,N),
+    state (B,H,P,N) -> (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    H = x.shape[1]
+    G = B.shape[1]
+    hpg = H // G
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))  # (B,H)
+    Br = jnp.repeat(B.astype(f32), hpg, axis=1)  # (B,H,N)
+    Cr = jnp.repeat(C.astype(f32), hpg, axis=1)
+    deposit = (dt.astype(f32)[..., None, None]
+               * x.astype(f32)[..., None] * Br[:, :, None, :])
+    new_state = state * dA[..., None, None] + deposit
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cr)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# --- full Mamba-2 block -----------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMState:
+    """Decode-time state for one mamba layer."""
+
+    conv_x: jax.Array  # (B, d_conv-1, d_inner) — causal conv tail, x stream
+    conv_bc: jax.Array  # (B, d_conv-1, 2*G*N) — causal conv tail, B/C streams
+    ssm: jax.Array  # (B, H, P, N)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Projection weights are split by stream (z / x / B,C / dt) instead of
+    the reference fused in_proj: z, x and dt columns shard over tensor-
+    parallel SSM heads while the small per-group B/C streams stay replicated
+    (standard Mamba TP layout; see repro.sharding.rules)."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    G = 1
+    kz, kx, kbc, kdt, kcx, kcbc, ko, ku = jax.random.split(key, 8)
+    # dt bias ~ log-uniform dt init in [1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ku, (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "z_proj": dense_init(kz, d, di, dtype),
+        "x_proj": dense_init(kx, d, di, dtype),
+        "bc_proj": dense_init(kbc, d, 2 * G * n, dtype),
+        "dt_proj": dense_init(kdt, d, h, dtype),
+        "conv_x_w": (jax.random.normal(kcx, (cfg.ssm_conv, di), jnp.float32)
+                     * (1.0 / cfg.ssm_conv)).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(kcbc, (cfg.ssm_conv, 2 * G * n),
+                                        jnp.float32)
+                      * (1.0 / cfg.ssm_conv)).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * G * n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ko, di, d, dtype),
+    }
+
+
+def _conv_with_tail(seq: jax.Array, tail: jax.Array | None, w: jax.Array,
+                    b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv; returns (activated output, new K-1 tail)."""
+    K = w.shape[0]
+    ktail = K - 1
+    if tail is None:
+        ext = jnp.pad(seq, ((0, 0), (ktail, 0), (0, 0)))
+    else:
+        ext = jnp.concatenate([tail.astype(seq.dtype), seq], axis=1)
+    out = sum(ext[:, i:i + seq.shape[1], :] * w[i] for i in range(K))
+    new_tail = ext[:, -ktail:] if ktail else seq[:, :0]
+    return jax.nn.silu(out + b), new_tail
+
+
+def mamba_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                  initial_state: SSMState | None = None,
+                  *, use_pallas: bool = False,
+                  ) -> tuple[jax.Array, SSMState]:
+    """Full-sequence mamba2 mixer. x (B,S,d_model) -> (y, final SSMState)."""
+    Bsz, S, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    G = 1
+    z = x @ params["z_proj"]
+    xs_raw = x @ params["x_proj"]
+    bc_raw = x @ params["bc_proj"]
+    dt = x @ params["dt_proj"]
+
+    tail_x = initial_state.conv_x if initial_state is not None else None
+    tail_bc = initial_state.conv_bc if initial_state is not None else None
+    xs, new_tail_x = _conv_with_tail(xs_raw, tail_x, params["conv_x_w"],
+                                     params["conv_x_b"])
+    bc, new_tail_bc = _conv_with_tail(bc_raw, tail_bc, params["conv_bc_w"],
+                                      params["conv_bc_b"])
+
+    xs = xs.reshape(Bsz, S, h, p)
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+    Bmat = Bmat.reshape(Bsz, S, G, n)
+    Cmat = Cmat.reshape(Bsz, S, G, n)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    # pad seq to a chunk multiple; dt=0 on padding -> identity transitions,
+    # zero deposits, so the final state is exact.
+    chunk = min(cfg.ssm_chunk, max(S, 1))
+    pad = (-S) % chunk
+    if pad:
+        padseq = lambda t: jnp.pad(t, [(0, 0), (0, pad)]
+                                   + [(0, 0)] * (t.ndim - 2))
+        xs, dt_act = padseq(xs), padseq(dt_act)
+        Bmat, Cmat = padseq(Bmat), padseq(Cmat)
+
+    ssm0 = initial_state.ssm if initial_state is not None else None
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y, final = kops.ssd_scan(xs, dt_act, A, Bmat, Cmat, params["D"],
+                                 chunk=chunk, initial_state=ssm0)
+    else:
+        y, final = ssd_chunked(xs, dt_act, A, Bmat, Cmat, params["D"],
+                               chunk=chunk, initial_state=ssm0)
+
+    y = y[:, :S].reshape(Bsz, S, di)
+    # gated RMSNorm (mamba2): normalize y * silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z),
+                eps=cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, SSMState(conv_x=new_tail_x.astype(x.dtype),
+                         conv_bc=new_tail_bc.astype(x.dtype), ssm=final)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    G = 1
+    return SSMState(
+        conv_x=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.bfloat16),
+        conv_bc=jnp.zeros((batch, cfg.ssm_conv - 1, 2 * G * cfg.ssm_state),
+                          jnp.bfloat16),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+    )
+
+
+def mamba_decode_step(params: dict, cfg: ModelConfig, x: jax.Array,
+                      state: SSMState) -> tuple[jax.Array, SSMState]:
+    """One-token mamba step. x (B,1,d_model)."""
+    Bsz = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    G = 1
+    xt = x[:, 0]  # (B, d)
+    z = xt @ params["z_proj"]
+    xs_raw = xt @ params["x_proj"]
+    bc_raw = xt @ params["bc_proj"]
+    dt = xt @ params["dt_proj"]
+
+    # conv over [tail, new] — tail holds the last K-1 raw channel vectors
+    def conv_step(tail, new, w, b):
+        K = w.shape[0]
+        window = jnp.concatenate([tail.astype(new.dtype), new[:, None, :]], 1)
+        out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + b)
+        new_tail = window[:, 1:] if K > 1 else window[:, :0]
+        return out, new_tail
+
+    xs, new_tail_x = conv_step(state.conv_x, xs_raw, params["conv_x_w"],
+                               params["conv_x_b"])
+    bc, new_tail_bc = conv_step(state.conv_bc, bc_raw, params["conv_bc_w"],
+                                params["conv_bc_b"])
+
+    xs = xs.reshape(Bsz, h, p)
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)
+    Bmat = Bmat.reshape(Bsz, G, n)
+    Cmat = Cmat.reshape(Bsz, G, n)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ssd_decode_step(xs, dt_act, A, Bmat, Cmat, params["D"],
+                                 state.ssm)
+    y = y.reshape(Bsz, 1, di)
+    y = rmsnorm({"scale": params["norm_scale"]},
+                y * jax.nn.silu(z)[:, None, :], eps=cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, SSMState(conv_x=new_tail_x.astype(state.conv_x.dtype),
+                         conv_bc=new_tail_bc.astype(state.conv_bc.dtype),
+                         ssm=new_ssm)

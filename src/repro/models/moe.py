@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FF layer (top-k routing, GShard-style grouped dispatch).
+
+Used by moonshot-v1-16b-a3b (64e top-6), qwen3-moe-30b-a3b (128e top-8) and
+jamba-v0.1-52b (16e top-2, every other layer).
+
+Dispatch is the GShard formulation: tokens are split into groups of
+``moe_group_size``; each group builds a (S_g, E, C) one-hot dispatch tensor
+with per-group capacity C = cf·S_g·k/E, so dispatch memory scales LINEARLY
+with group size (a flat per-batch dispatch tensor would be quadratic in
+tokens and reach tens of TB at the 1M-token global batches of the train_4k
+cells). The dispatch/combine einsums are dense and MXU-friendly; under EP
+sharding (groups over ``data``, experts over ``model``) XLA inserts the
+canonical MoE all-to-all pair around the expert FF.
+
+Tokens over a group's capacity are dropped (residual path carries them;
+Switch-style). The Pallas path swaps the expert FF einsums for the
+grouped-matmul kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import truncated_normal_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": truncated_normal_init(kr, (d, e), d ** -0.5, jnp.float32),
+        "w_gate": truncated_normal_init(kg, (e, d, ff), d ** -0.5, dtype),
+        "w_up": truncated_normal_init(ku, (e, d, ff), d ** -0.5, dtype),
+        "w_down": truncated_normal_init(kd, (e, ff, d), ff ** -0.5, dtype),
+    }
+
+
+def router_probs(params: dict, cfg: ModelConfig, x: jax.Array):
+    """Top-k routing with renormalized softmax gates.
+
+    x (..., d) -> gates (..., k), expert ids (..., k), full probs (..., E).
+    """
+    logits = (x.astype(jnp.float32) @ params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def group_capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    cap = int(cfg.moe_capacity_factor * group_tokens * cfg.experts_per_token
+              / cfg.n_experts)
+    return max(8, (cap + 7) // 8 * 8)  # MXU-friendly multiple of 8
+
+
+def moe_forward(params: dict, cfg: ModelConfig, x: jax.Array,
+                *, use_pallas: bool = False) -> tuple[jax.Array, jax.Array]:
+    """MoE FF over x (B, S, d). Returns (out (B,S,d), aux_loss ())."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.experts_per_token
+    Sg = min(cfg.moe_group_size, T)
+    while T % Sg:  # groups must tile the token stream
+        Sg //= 2
+    Sg = max(Sg, 1)
+    G = T // Sg
+    C = group_capacity(cfg, Sg)
+
+    xt = x.reshape(G, Sg, d)
+    gates, ids, probs = router_probs(params, cfg, xt)  # (G,Sg,k) / (G,Sg,E)
+
+    # position of each (token, choice) within its expert's per-group buffer
+    onehot_e = jax.nn.one_hot(ids, E, dtype=jnp.int32)  # (G,Sg,k,E)
+    flat = onehot_e.reshape(G, Sg * k, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat  # (G, Sg*k, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(G, Sg, k)  # (G,Sg,k)
+    keep = pos < C
+
+    # dispatch/combine tensors: (G, Sg, E, C)
+    disp = (jax.nn.one_hot(ids, E, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(pos, C, dtype=xt.dtype)[..., None, :]
+            * keep[..., None, None].astype(xt.dtype))  # (G,Sg,k,E,C)
+    dispatch = disp.sum(2)
+    combine = (disp * gates[..., None, None].astype(xt.dtype)).sum(2)
+
+    # expert inputs: (G, E, C, d) -> all-to-all under (data, model) sharding
+    xe = jnp.einsum("gsd,gsec->gecd", xt, dispatch)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        xe2 = xe.reshape(G, E, C * d).swapaxes(0, 1).reshape(E, G * C, d)
+        h = kops.grouped_matmul(xe2, params["w_gate"])
+        u = kops.grouped_matmul(xe2, params["w_up"])
+        ye2 = kops.grouped_matmul(jax.nn.silu(h) * u, params["w_down"])
+        ye = ye2.reshape(E, G, C, d).swapaxes(0, 1)
+    else:
+        h = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+        u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+        ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                        params["w_down"])
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine).reshape(B, S, d)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    f = onehot_e.sum(2).astype(jnp.float32).mean((0, 1))  # routed frac per e
+    p = probs.mean((0, 1))
+    aux = E * jnp.sum(f * p) * (1.0 / k)
+    return out, aux

@@ -1,0 +1,585 @@
+"""Unified model definition for the whole architecture pool.
+
+One code path covers: dense GQA llama-style (deepseek/h2o-danube/qwen2/
+granite), MoE (moonshot/qwen3-moe), pure SSM (mamba2), hybrid attn+mamba+MoE
+(jamba), encoder-decoder with stub conv frontend (whisper), and a VLM decoder
+backbone with M-RoPE and stub vision frontend (qwen2-vl).
+
+Layer stacking uses ``lax.scan`` over *super-blocks*: the repeating layer
+pattern of length ``period = lcm(attn_period, moe_period)`` (1 for homogeneous
+models, 8 for jamba's 1:7 attn:mamba interleave with MoE every other layer).
+Each scan step applies the ``period`` heterogeneous sub-layers; the scan
+carries activations over ``n_layers // period`` super-blocks. This keeps the
+HLO size O(period) instead of O(n_layers) — essential for the 88-layer
+granite-34b dry-run at 512 devices — while remat policies still apply per
+scan step.
+
+Params are nested dicts of jnp arrays (no flax). Everything here works under
+``jax.eval_shape`` so the dry-run can build parameter ShapeDtypeStructs
+without allocating the 72B-parameter models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import Family, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    embed_init,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+from repro.models.mamba2 import SSMState
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayerKind:
+    """Static structure of one sub-layer position within the super-block."""
+
+    mixer: str  # "attn" | "mamba"
+    ff: Optional[str]  # "dense" | "moe" | None (SSM family has no FF)
+    cross_attn: bool = False  # whisper decoder
+
+
+def block_period(cfg: ModelConfig) -> int:
+    a = cfg.attn_period if cfg.attn_period > 0 else 1
+    m = cfg.moe_period if cfg.n_experts else 1
+    return math.lcm(a, m)
+
+
+def layer_kinds(cfg: ModelConfig) -> list[SubLayerKind]:
+    """The per-position kinds of one super-block (constant across supers)."""
+    period = block_period(cfg)
+    if cfg.n_layers % period != 0:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} not divisible "
+                         f"by layer pattern period={period}")
+    kinds = []
+    for j in range(period):
+        mixer = "attn" if cfg.is_attn_layer(j) else "mamba"
+        if cfg.family == Family.SSM:
+            ff = None
+        elif cfg.is_moe_layer(j):
+            ff = "moe"
+        else:
+            ff = "dense"
+        kinds.append(SubLayerKind(mixer=mixer, ff=ff,
+                                  cross_attn=cfg.is_encoder_decoder))
+    # sanity: pattern must repeat identically across super-blocks
+    for i in range(cfg.n_layers):
+        j = i % period
+        assert cfg.is_attn_layer(i) == (kinds[j].mixer == "attn"), (i, j)
+        if cfg.family != Family.SSM:
+            assert cfg.is_moe_layer(i) == (kinds[j].ff == "moe"), (i, j)
+    return kinds
+
+
+def n_super(cfg: ModelConfig) -> int:
+    return cfg.n_layers // block_period(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(key, cfg: ModelConfig, kind: SubLayerKind, dtype) -> dict:
+    keys = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg, dtype)
+    else:
+        p["mamba"] = mamba_mod.init_mamba(keys[1], cfg, dtype)
+    if kind.cross_attn:
+        p["norm_x"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn_mod.init_cross_attention(keys[2], cfg, dtype)
+    if kind.ff is not None:
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        if kind.ff == "moe":
+            p["moe"] = moe_mod.init_moe(keys[3], cfg, dtype)
+        elif cfg.mlp_gelu:
+            p["ff"] = {
+                "w1": dense_init(keys[4], cfg.d_model, cfg.d_ff, dtype),
+                "b1": jnp.zeros((cfg.d_ff,), dtype),
+                "w2": dense_init(keys[5], cfg.d_ff, cfg.d_model, dtype),
+                "b2": jnp.zeros((cfg.d_model,), dtype),
+            }
+        else:
+            p["ff"] = init_mlp(keys[4], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model),
+        "attn": attn_mod.init_attention(k1, cfg, dtype),
+        "norm2": init_rmsnorm(cfg.d_model),
+        "ff": ({"w1": dense_init(k2, cfg.d_model, cfg.d_ff, dtype),
+                "b1": jnp.zeros((cfg.d_ff,), dtype),
+                "w2": dense_init(jax.random.fold_in(k2, 1), cfg.d_ff,
+                                 cfg.d_model, dtype),
+                "b2": jnp.zeros((cfg.d_model,), dtype)}
+               if cfg.mlp_gelu else init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)),
+    }
+
+
+def _stack_inits(init_fn, keys) -> dict:
+    """Stack per-super params along a new leading axis via vmap(init)."""
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key, cfg: ModelConfig, *, dtype=None,
+                max_positions: int = 0) -> dict:
+    """Build the full parameter pytree.
+
+    ``max_positions``: decoder absolute-position table size override (whisper
+    decode beyond the published 448 positions — mechanical extension noted in
+    DESIGN.md).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = layer_kinds(cfg)
+    ns = n_super(cfg)
+    k_embed, k_blocks, k_head, k_enc, k_pos = jax.random.split(key, 5)
+
+    params: dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                       dtype)
+
+    blocks = []
+    for j, kind in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(k_blocks, j), ns)
+        blocks.append(_stack_inits(
+            lambda k, kind=kind: _init_sublayer(k, cfg, kind, dtype), keys))
+    params["blocks"] = blocks
+
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        params["encoder"] = {
+            "blocks": _stack_inits(
+                lambda k: _init_encoder_layer(k, cfg, dtype), ekeys),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+        n_pos = max_positions or cfg.max_position_embeddings
+        params["pos_embed"] = embed_init(k_pos, n_pos, cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid_pos(seq: int, d: int, dtype) -> jax.Array:
+    """Whisper-style sinusoidal position embedding table (seq, d)."""
+    half = d // 2
+    log_timescale = np.log(10000.0) / max(half - 1, 1)
+    inv = np.exp(-log_timescale * np.arange(half))
+    pos = np.arange(seq)[:, None] * inv[None, :]
+    table = np.concatenate([np.sin(pos), np.cos(pos)], axis=1)
+    return jnp.asarray(table, dtype)
+
+
+def _ff_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_gelu:
+        return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return mlp(p, x)
+
+
+def _apply_sublayer(p: dict, cfg: ModelConfig, kind: SubLayerKind,
+                    x: jax.Array, positions: jax.Array,
+                    memory_kv, use_pallas: bool):
+    """One pre-norm sub-layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind.mixer == "attn":
+        x = x + attn_mod.attention(p["attn"], cfg, h, positions,
+                                   use_pallas=use_pallas)
+    else:
+        y, _ = mamba_mod.mamba_forward(p["mamba"], cfg, h,
+                                       use_pallas=use_pallas)
+        x = x + y
+    if kind.cross_attn and memory_kv is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        x = x + attn_mod.cross_attention(p["cross"], cfg, h, memory_kv)
+    if kind.ff is not None:
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind.ff == "moe":
+            y, aux = moe_mod.moe_forward(p["moe"], cfg, h,
+                                         use_pallas=use_pallas)
+            x = x + y
+        else:
+            x = x + _ff_apply(p["ff"], cfg, h)
+    return x, aux
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frontend output ``frames`` (B, S_enc, d)."""
+    x = frames + _sinusoid_pos(frames.shape[1], cfg.d_model, frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+
+    def step(x, p):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        # bidirectional self-attention (no causal mask, no rope — sinusoid)
+        B, S, _ = h.shape
+        q, k, v = attn_mod._project_qkv(p["attn"], cfg, h)
+        y = attn_mod.sdpa(q, k, v, causal=False)
+        x = x + y.reshape(B, S, -1) @ p["attn"]["wo"]
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + _ff_apply(p["ff"], cfg, h)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, params["encoder"]["blocks"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            positions: jax.Array | None = None,
+            patch_embeds: jax.Array | None = None,
+            encoder_frames: jax.Array | None = None,
+            use_pallas: bool = False,
+            remat: str = "none",
+            act_spec=None,
+            scan_unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V), moe_aux ()).
+
+    ``tokens``          (B, S) int32 token ids.
+    ``positions``       rope positions: (B,S), or (3,B,S) for M-RoPE. Default
+                        arange.
+    ``patch_embeds``    (B, P, d) stub vision-frontend output (qwen2-vl):
+                        overrides the embeddings of the first P positions.
+    ``encoder_frames``  (B, S_enc, d) stub audio-frontend output (whisper).
+    ``remat``           activation checkpointing policy name (see
+                        repro.train.remat): applied per scan step.
+    ``act_spec``        PartitionSpec pinned on the residual stream (B,S,d)
+                        at superblock boundaries — e.g. sequence parallelism
+                        P(data, "model", None) keeps the scan carry (which
+                        reverse-mode saves once per superblock) sharded over
+                        the model axis instead of replicated.
+    """
+    B, S = tokens.shape
+    kinds = layer_kinds(cfg)
+
+    def pin(h):
+        if act_spec is None:
+            return h
+        return jax.lax.with_sharding_constraint(h, act_spec)
+
+    x = pin(jnp.take(params["embed"], tokens, axis=0))
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    if cfg.is_encoder_decoder:
+        pos_table = params["pos_embed"]
+        x = x + jnp.take(pos_table, jnp.arange(S) % pos_table.shape[0],
+                         axis=0)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None, "whisper needs encoder_frames"
+        memory = encode(params, cfg, encoder_frames)
+
+    def superblock(x, block_params):
+        aux_total = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(kinds):
+            mkv = None
+            if kind.cross_attn:
+                mkv = attn_mod.memory_kv(block_params[j]["cross"], cfg, memory)
+            x, aux = _apply_sublayer(block_params[j], cfg, kind, x,
+                                     positions, mkv, use_pallas)
+            aux_total = aux_total + aux
+        return pin(x), aux_total
+
+    if remat != "none":
+        from repro.train.remat import wrap_remat
+        superblock = wrap_remat(superblock, remat)
+
+    x, aux = jax.lax.scan(lambda c, p: superblock(c, p), x,
+                          tuple(params["blocks"]), unroll=scan_unroll)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    return logits, jnp.sum(aux)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
+            use_pallas: bool = False, remat: str = "none",
+            act_spec=None, scan_unroll: bool = False,
+            aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    """Next-token CE + MoE aux loss. batch: tokens/labels (+ stub inputs)."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+        use_pallas=use_pallas, remat=remat, act_spec=act_spec,
+        scan_unroll=scan_unroll)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + aux_weight * aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    """Per-sub-layer-position caches, each stacked over super-blocks.
+
+    ``caches[j]`` is a KVCache (attn positions) or SSMState (mamba positions)
+    whose leaves carry a leading (n_super,) axis. ``cross_kv`` holds the
+    whisper encoder memory K/V per position ((n_super, B, S_enc, Hkv, D) x2)
+    when the model is encoder-decoder, else None. ``step`` counts decoded
+    tokens.
+    """
+
+    caches: list[Any]
+    cross_kv: Optional[Any]
+    step: jax.Array  # () int32
+
+
+def init_decode_state(params: dict | None, cfg: ModelConfig, batch: int,
+                      max_seq: int, *,
+                      encoder_frames: jax.Array | None = None,
+                      dtype=None) -> DecodeState:
+    """Allocate decode caches (params only needed for enc-dec cross K/V)."""
+    kinds = layer_kinds(cfg)
+    ns = n_super(cfg)
+    dtype = dtype or jnp.dtype(cfg.cache_dtype)
+
+    def stack(make):
+        leaves = [make() for _ in range(ns)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    caches = []
+    for kind in kinds:
+        if kind.mixer == "attn":
+            caches.append(stack(
+                lambda: attn_mod.init_kv_cache(cfg, batch, max_seq, dtype)))
+        else:
+            caches.append(stack(lambda: mamba_mod.init_ssm_state(cfg, batch)))
+
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        assert params is not None and encoder_frames is not None
+        memory = encode(params, cfg, encoder_frames)
+        per_pos = []
+        for j in range(len(kinds)):
+            kv = jax.vmap(
+                lambda bp: attn_mod.memory_kv(bp["cross"], cfg, memory)
+            )(params["blocks"][j])
+            per_pos.append(kv)
+        cross_kv = per_pos
+    return DecodeState(caches=caches, cross_kv=cross_kv,
+                       step=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: DecodeState,
+                tokens: jax.Array, *,
+                scan_unroll: bool = False) -> tuple[jax.Array, DecodeState]:
+    """One-token decode. tokens (B, 1) -> (logits (B, 1, V), new state)."""
+    kinds = layer_kinds(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.is_encoder_decoder:
+        pos_table = params["pos_embed"]
+        x = x + jnp.take(pos_table, state.step[None] % pos_table.shape[0],
+                         axis=0)
+
+    # scan over super-blocks, unrolled over the (short) period
+    def superstep(x, block_params, cache_slices, cross_slices):
+        new_slices = []
+        for j, kind in enumerate(kinds):
+            p = block_params[j]
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            if kind.mixer == "attn":
+                y, newc = attn_mod.decode_attention(p["attn"], cfg, h,
+                                                    cache_slices[j])
+            else:
+                y, newc = mamba_mod.mamba_decode_step(p["mamba"], cfg, h,
+                                                      cache_slices[j])
+            x = x + y
+            new_slices.append(newc)
+            if kind.cross_attn and cross_slices is not None:
+                h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+                x = x + attn_mod.cross_attention(p["cross"], cfg, h,
+                                                 cross_slices[j])
+            if kind.ff is not None:
+                h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+                if kind.ff == "moe":
+                    y, _ = moe_mod.moe_forward(p["moe"], cfg, h)
+                    x = x + y
+                else:
+                    x = x + _ff_apply(p["ff"], cfg, h)
+        return x, tuple(new_slices)
+
+    if state.cross_kv is None:
+        x, new_stacks = jax.lax.scan(
+            lambda c, sl: superstep(c, sl[0], sl[1], None), x,
+            (tuple(params["blocks"]), tuple(state.caches)),
+            unroll=scan_unroll)
+    else:
+        x, new_stacks = jax.lax.scan(
+            lambda c, sl: superstep(c, *sl), x,
+            (tuple(params["blocks"]), tuple(state.caches),
+             tuple(state.cross_kv)), unroll=scan_unroll)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    new_state = DecodeState(caches=list(new_stacks),
+                            cross_kv=state.cross_kv, step=state.step + 1)
+    return logits, new_state
+
+
+def _kv_to_ring(k: jax.Array, buf: int) -> jax.Array:
+    """Pack the last ``buf`` positions of k (B,S,H,D) into the ring layout
+    used by decode_attention: slot i holds the largest p <= S-1 with
+    p %% buf == i."""
+    S = k.shape[1]
+    if S <= buf:
+        pad = [(0, 0), (0, buf - S), (0, 0), (0, 0)]
+        return jnp.pad(k, pad)
+    start = S - buf
+    src = start + (jnp.arange(buf) - start) % buf  # position stored in slot i
+    return k[:, src]
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            max_seq: int,
+            positions: jax.Array | None = None,
+            patch_embeds: jax.Array | None = None,
+            encoder_frames: jax.Array | None = None,
+            cache_dtype=jnp.bfloat16,
+            use_pallas: bool = False,
+            scan_unroll: bool = False) -> tuple[jax.Array, DecodeState]:
+    """Full-sequence forward that also materializes the decode caches.
+
+    Returns (logits (B,S,V), DecodeState ready for token S).
+    """
+    B, S = tokens.shape
+    kinds = layer_kinds(cfg)
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    if cfg.is_encoder_decoder:
+        pos_table = params["pos_embed"]
+        x = x + jnp.take(pos_table, jnp.arange(S) % pos_table.shape[0], axis=0)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+
+    memory = None
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None
+        memory = encode(params, cfg, encoder_frames)
+
+    kv_buf = (max_seq if cfg.sliding_window is None
+              else min(max_seq, cfg.sliding_window))
+
+    def superblock(x, block_params):
+        new_caches = []
+        for j, kind in enumerate(kinds):
+            p = block_params[j]
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            if kind.mixer == "attn":
+                q, k, v = attn_mod._project_qkv(p["attn"], cfg, h)
+                q, k = attn_mod._rope(cfg, q, k, positions)
+                if use_pallas:
+                    from repro.kernels import ops as kops
+                    o = kops.flash_attention(q, k, v, causal=True,
+                                             window=cfg.sliding_window)
+                else:
+                    o = attn_mod.sdpa(q, k, v, causal=True,
+                                      window=cfg.sliding_window,
+                                      block_q=cfg.attn_block_q)
+                x = x + (o.reshape(B, S, -1) @ p["attn"]["wo"])
+                new_caches.append(KVCache(
+                    k=_kv_to_ring(k.astype(cache_dtype), kv_buf),
+                    v=_kv_to_ring(v.astype(cache_dtype), kv_buf),
+                    length=jnp.asarray(S, jnp.int32)))
+            else:
+                y, st = mamba_mod.mamba_forward(p["mamba"], cfg, h,
+                                                use_pallas=use_pallas)
+                x = x + y
+                new_caches.append(st)
+            if kind.cross_attn and memory is not None:
+                mkv = attn_mod.memory_kv(p["cross"], cfg, memory)
+                h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+                x = x + attn_mod.cross_attention(p["cross"], cfg, h, mkv)
+            if kind.ff is not None:
+                h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+                if kind.ff == "moe":
+                    y, _ = moe_mod.moe_forward(p["moe"], cfg, h,
+                                               use_pallas=use_pallas)
+                    x = x + y
+                else:
+                    x = x + _ff_apply(p["ff"], cfg, h)
+        return x, tuple(new_caches)
+
+    x, cache_stacks = jax.lax.scan(superblock, x, tuple(params["blocks"]),
+                                   unroll=scan_unroll)
+
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        per_pos = []
+        for j in range(len(kinds)):
+            kv = jax.vmap(
+                lambda bp: attn_mod.memory_kv(bp["cross"], cfg, memory)
+            )(params["blocks"][j])
+            per_pos.append(kv)
+        cross_kv = per_pos
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    state = DecodeState(caches=list(cache_stacks), cross_kv=cross_kv,
+                        step=jnp.asarray(S, jnp.int32))
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting helpers
+# ---------------------------------------------------------------------------
+
+
+def count_params(params: dict) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def param_bytes(params: dict) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(params))

@@ -1,0 +1,4 @@
+"""Serving: batched engine + GreenScale per-request router."""
+
+from repro.serve.engine import ServeEngine
+from repro.serve.router import GreenScaleRouter, Request, RouteDecision

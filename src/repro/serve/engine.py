@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + decode over the model zoo.
+
+The engine jits two functions per (batch, seq) bucket:
+
+  * ``prefill_step``  — full-sequence forward materializing the decode cache
+    (full KV / SWA ring / SSM state, per architecture);
+  * ``serve_step``    — one new token for the whole batch against the cache
+    (this is what the ``decode_*`` dry-run cells lower).
+
+Requests are right-aligned into fixed buckets (classic continuous-batching
+simplification: one bucket here; the router decides *where* a request runs,
+the engine decides *how*).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, prefill
+from repro.models.transformer import DecodeState
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    max_seq: int = 4096
+    use_pallas: bool = False
+    greedy: bool = True
+
+    def __post_init__(self):
+        cfg, use_pallas = self.cfg, self.use_pallas
+
+        @jax.jit
+        def _prefill(params, tokens, extras):
+            return prefill(params, cfg, tokens, max_seq=self.max_seq,
+                           positions=extras.get("positions"),
+                           patch_embeds=extras.get("patch_embeds"),
+                           encoder_frames=extras.get("encoder_frames"),
+                           use_pallas=use_pallas)
+
+        @jax.jit
+        def _decode(params, state, tokens):
+            return decode_step(params, cfg, state, tokens)
+
+        self._prefill_fn = _prefill
+        self._decode_fn = _decode
+
+    def prefill_batch(self, tokens: jax.Array, **extras
+                      ) -> tuple[jax.Array, DecodeState]:
+        """tokens (B, S) -> (last-position logits (B, V), decode state)."""
+        logits, state = self._prefill_fn(self.params, tokens, extras)
+        return logits[:, -1], state
+
+    def serve_step(self, state: DecodeState, tokens: jax.Array
+                   ) -> tuple[jax.Array, DecodeState]:
+        """One decode step. tokens (B, 1) -> (logits (B, V), new state)."""
+        logits, state = self._decode_fn(self.params, state, tokens)
+        return logits[:, 0], state
+
+    def generate(self, tokens: jax.Array, *, max_new_tokens: int,
+                 key: jax.Array | None = None, temperature: float = 0.0,
+                 **extras) -> jax.Array:
+        """Greedy/temperature sampling. Returns (B, max_new_tokens)."""
+        logits, state = self.prefill_batch(tokens, **extras)
+        outs = []
+        tok = self._sample(logits, key, temperature, 0)
+        for i in range(max_new_tokens):
+            outs.append(tok)
+            if i == max_new_tokens - 1:
+                break
+            logits, state = self.serve_step(state, tok)
+            tok = self._sample(logits, key, temperature, i + 1)
+        return jnp.concatenate(outs, axis=1)
+
+    @staticmethod
+    def _sample(logits: jax.Array, key, temperature: float,
+                i: int) -> jax.Array:
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,10 @@
+"""Distribution layer: per-architecture partition rules over the production mesh."""
+
+from repro.sharding.rules import (
+    MeshAxes,
+    batch_sharding,
+    decode_state_sharding,
+    logical_param_spec,
+    param_shardings,
+    spec_tree,
+)

@@ -1,0 +1,20 @@
+"""Training substrate: optimizer, step functions, distribution, fault tolerance."""
+
+from repro.train.remat import POLICIES, wrap_remat
+from repro.train.optimizer import (
+    AdamState,
+    Optimizer,
+    adamw,
+    constant_lr,
+    global_norm,
+    warmup_cosine,
+)
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+from repro.train.compression import MODES as COMPRESSION_MODES
+from repro.train.fault import ElasticRunner, StragglerPolicy, make_straggler_train_step
+from repro.train.carbon_aware import (
+    CarbonAwareTrainer,
+    CarbonSchedule,
+    LedgerRow,
+    PodSpec,
+)

@@ -1,0 +1,103 @@
+"""AdamW + LR schedules, from scratch (no optax in the container).
+
+Moments are fp32 regardless of param dtype; the update is computed in fp32
+and cast back. The optimizer is a pair of pure functions over pytrees so it
+jits/shards transparently — moment tensors inherit the parameter
+PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array  # () int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, *,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamState, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        step_lr = lr_fn(count)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            wd = weight_decay if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - step_lr * (step + wd
+                                                       * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+        new_params = jax.tree.map(lambda t3: t3[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t3: t3[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t3: t3[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(new_mu, new_nu, count), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+# --- schedules -----------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(count: jax.Array) -> jax.Array:
+        t = count.astype(jnp.float32)
+        warm = peak_lr * t / max(warmup_steps, 1)
+        prog = jnp.clip((t - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(t < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_lr(value: float) -> Callable:
+    return lambda _: jnp.asarray(value, jnp.float32)

@@ -1,0 +1,29 @@
+"""Activation-checkpoint (remat) policies — a §Perf lever.
+
+Applied per super-block scan step in ``repro.models.transformer.forward``:
+the backward pass recomputes what the policy does not save, trading HLO FLOPs
+(compute roofline term) against HBM bytes (memory term).
+
+Policies:
+  ``none``     save everything (no recompute, max activation memory)
+  ``dots``     save matmul outputs with no batch dims (XLA's balanced default
+               for transformers: keeps big GEMM results, recomputes the rest)
+  ``minimal``  save nothing per block (max recompute, min memory)
+"""
+
+from __future__ import annotations
+
+import jax
+
+POLICIES = ("none", "dots", "minimal")
+
+
+def wrap_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "minimal":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(f"unknown remat policy {policy!r}; known: {POLICIES}")

@@ -1,0 +1,182 @@
+"""The jitted training step: loss -> grads -> AdamW, with microbatch
+accumulation, remat policies and optional compressed DP collectives.
+
+Two code paths:
+
+  * ``compression="none"`` — pure pjit: XLA inserts the DP all-reduce during
+    backprop (in the gradient dtype). This is the dry-run baseline.
+  * ``compression in ("bf16", "int8")`` — the whole grad computation runs in
+    a partial-manual ``jax.shard_map`` over the data axes (``model`` stays
+    automatic), exposing per-rank local gradients so the explicit compressed
+    psum from repro.train.compression is the only DP collective.
+
+Microbatching reshapes the local batch (B, ...) -> (k, B/k, ...) and
+accumulates fp32 gradients with ``lax.scan`` — activation memory scales with
+B/k while keeping one optimizer step per global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.train import compression as comp
+from repro.train.optimizer import AdamState, Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamState
+    ef: Optional[Any]  # error-feedback buffers (compressed modes only)
+
+    @property
+    def step(self) -> jax.Array:
+        return self.opt.count
+
+
+def init_train_state(params, optimizer: Optimizer, *,
+                     compression: str = "none", mesh: Mesh | None = None,
+                     data_axes: tuple[str, ...] = ()) -> TrainState:
+    ef = None
+    if compression != "none":
+        assert mesh is not None
+        ef = comp.init_error_feedback(params, mesh, data_axes)
+    return TrainState(params=params, opt=optimizer.init(params), ef=ef)
+
+
+def _microbatch(batch: dict, k: int) -> dict:
+    """Split the leading batch dim into (k, B/k). positions split on dim 1."""
+    def split(path, x):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        if keys and keys[-1] == "positions":  # (3, B, S)
+            B = x.shape[1]
+            assert B % k == 0, (B, k)
+            out = x.reshape(x.shape[0], k, B // k, *x.shape[2:])
+            return jnp.moveaxis(out, 1, 0)  # (k, 3, B/k, S)
+        B = x.shape[0]
+        assert B % k == 0, (B, k)
+        return x.reshape(k, B // k, *x.shape[1:])
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def _grads_over_microbatches(params, batch: dict, cfg: ModelConfig, *,
+                             microbatches: int, remat: str,
+                             use_pallas: bool, act_spec=None,
+                             scan_unroll: bool = False):
+    """Mean-over-batch loss gradient, accumulated fp32 over k microbatches."""
+    gfn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, remat=remat, use_pallas=use_pallas,
+                             act_spec=act_spec, scan_unroll=scan_unroll),
+        has_aux=True)
+
+    if microbatches <= 1:
+        (loss, metrics), grads = gfn(params, batch)
+        return grads, metrics
+
+    mb = _microbatch(batch, microbatches)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def step(carry, b):
+        acc = carry
+        (_, metrics), grads = gfn(params, b)
+        acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                           acc, grads)
+        return acc, metrics
+
+    grads, metrics = jax.lax.scan(step, zero_g, mb)
+    metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+    return grads, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    mesh: Mesh | None = None,
+                    remat: str = "dots",
+                    microbatches: int = 1,
+                    compression: str = "none",
+                    use_pallas: bool = False,
+                    act_spec=None,
+                    scan_unroll: bool = False,
+                    grad_dtype: str | None = None):
+    """Build the train_step(state, batch) -> (state, metrics) function.
+
+    ``grad_dtype="bfloat16"`` pins the gradient dtype before the optimizer
+    (and therefore before GSPMD's DP reduction): halves the gradient
+    all-reduce bytes; AdamW still accumulates moments in fp32.
+    """
+    if compression not in comp.MODES:
+        raise ValueError(compression)
+
+    if compression == "none":
+
+        def train_step(state: TrainState, batch: dict):
+            grads, metrics = _grads_over_microbatches(
+                state.params, batch, cfg, microbatches=microbatches,
+                remat=remat, use_pallas=use_pallas, act_spec=act_spec,
+                scan_unroll=scan_unroll)
+            if grad_dtype is not None:
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.dtype(grad_dtype)), grads)
+            new_params, new_opt, gnorm = optimizer.update(
+                grads, state.opt, state.params)
+            metrics = dict(metrics, grad_norm=gnorm,
+                           step=new_opt.count.astype(jnp.float32))
+            return TrainState(new_params, new_opt, state.ef), metrics
+
+        return train_step
+
+    # --- compressed DP path (explicit collectives via shard_map) -------------
+    assert mesh is not None, "compressed modes need the mesh"
+    data_axes = tuple(n for n in mesh.axis_names if n != "model")
+    n_dp = comp.dp_size(mesh, data_axes)
+
+    def local_region(params, ef, batch):
+        """Runs per-DP-rank (manual on data axes, auto on model)."""
+        grads, metrics = _grads_over_microbatches(
+            params, batch, cfg, microbatches=microbatches,
+            remat=remat, use_pallas=use_pallas)  # seq-sharding n/a in manual DP
+        mean_grads, new_ef = comp.compress_and_reduce(
+            grads, ef, mode=compression, data_axes=data_axes, n_dp=n_dp)
+        metrics = jax.tree.map(
+            lambda m: jax.lax.pmean(m, data_axes), metrics)
+        return mean_grads, new_ef, metrics
+
+    def batch_in_specs(batch):
+        def spec(path, x):
+            keys = [p.key for p in path if hasattr(p, "key")]
+            if keys and keys[-1] == "positions":
+                return P(None, data_axes, *([None] * (x.ndim - 2)))
+            return P(data_axes, *([None] * (x.ndim - 1)))
+        return jax.tree_util.tree_map_with_path(spec, batch)
+
+    def train_step(state: TrainState, batch: dict):
+        params_spec = jax.tree.map(lambda _: P(), state.params)
+        ef_specs = jax.tree.map(
+            lambda e: P(data_axes, *([None] * (e.ndim - 1))), state.ef)
+        region = jax.shard_map(
+            local_region,
+            mesh=mesh,
+            in_specs=(params_spec, ef_specs, batch_in_specs(batch)),
+            out_specs=(params_spec, ef_specs,
+                       jax.tree.map(lambda _: P(), {"loss": 0, "ce": 0,
+                                                    "moe_aux": 0})),
+            axis_names=frozenset(data_axes),
+            check_vma=False,
+        )
+        mean_grads, new_ef, metrics = region(state.params, state.ef, batch)
+        new_params, new_opt, gnorm = optimizer.update(
+            mean_grads, state.opt, state.params)
+        metrics = dict(metrics, grad_norm=gnorm,
+                       step=new_opt.count.astype(jnp.float32))
+        return TrainState(new_params, new_opt, new_ef), metrics
+
+    return train_step

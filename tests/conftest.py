@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs ONLY to repro.launch.dryrun)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, what=""):
+    for leaf in jax.tree.leaves(tree):
+        assert bool(jnp.isfinite(leaf).all()), f"non-finite values in {what}"

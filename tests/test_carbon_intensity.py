@@ -1,0 +1,74 @@
+"""Tests for grid traces, charging behaviour, uncertainty injection."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChargingBehavior, Grid, grid_trace, mobile_carbon_intensity
+from repro.core.carbon_intensity import all_grid_traces, ci_of_mix, perturb_mix
+from repro.core.constants import SOURCE_CI_LIST
+
+
+def test_mixes_are_distributions():
+    for g in Grid:
+        t = grid_trace(g)
+        np.testing.assert_allclose(np.asarray(t.mix.sum(-1)), 1.0, atol=1e-6)
+        assert bool((t.mix >= 0).all())
+
+
+def test_ci_bounds():
+    lo, hi = min(SOURCE_CI_LIST), max(SOURCE_CI_LIST)
+    for g in Grid:
+        t = grid_trace(g)
+        assert bool((t.ci_hourly >= lo).all()) and bool((t.ci_hourly <= hi).all())
+
+
+def test_ciso_solar_dip():
+    """CISO (Fig 4 left): midday CI well below nighttime CI."""
+    t = grid_trace(Grid.CISO)
+    midday = float(t.ci_hourly[12:15].mean())
+    night = float(jnp.concatenate([t.ci_hourly[:5], t.ci_hourly[22:]]).mean())
+    assert midday < 0.7 * night
+
+
+def test_rural_cleaner_than_urban():
+    urban = grid_trace(Grid.URBAN)
+    rural = grid_trace(Grid.RURAL)
+    assert float(rural.ci_mean) < float(urban.ci_mean)
+
+
+def test_charging_behaviour_ordering():
+    """Fig 4/7: on a solar grid, intelligent < average < nighttime CI."""
+    t = grid_trace(Grid.CISO)
+    ci_n = float(mobile_carbon_intensity(ChargingBehavior.NIGHTTIME, t))
+    ci_a = float(mobile_carbon_intensity(ChargingBehavior.AVERAGE, t))
+    ci_i = float(mobile_carbon_intensity(ChargingBehavior.INTELLIGENT, t))
+    assert ci_i < ci_a < ci_n
+
+
+def test_charging_ci_is_convex_combination():
+    t = grid_trace(Grid.NYISO)
+    for b in ChargingBehavior:
+        ci = float(mobile_carbon_intensity(b, t))
+        assert float(t.ci_hourly.min()) - 1e-6 <= ci <= float(t.ci_hourly.max()) + 1e-6
+
+
+def test_perturb_mix_statistics():
+    """Uncertainty injection (§5.2): rows stay distributions; the mean CI
+    stays near the base trace; fluctuation magnitude is bounded."""
+    t = grid_trace(Grid.CISO)
+    key = jax.random.PRNGKey(0)
+    mixes = perturb_mix(key, t.mix, n_samples=256)
+    np.testing.assert_allclose(np.asarray(mixes.sum(-1)), 1.0, atol=1e-5)
+    assert bool((mixes >= -1e-7).all())
+    cis = ci_of_mix(mixes)  # (256, 24)
+    base = t.ci_hourly
+    rel = np.abs(np.asarray(cis.mean(0)) - np.asarray(base)) / np.asarray(base)
+    assert rel.mean() < 0.15  # mean preserved
+    spread = np.asarray(cis.std(0) / base).mean()
+    assert 0.005 < spread < 0.25  # ~16.8%-scale fluctuations
+
+
+def test_all_grid_traces_stacked():
+    t = all_grid_traces()
+    assert t.ci_hourly.shape == (len(Grid), 24)

@@ -1,0 +1,167 @@
+"""Unit + property tests for the Table-1 carbon model (repro.core)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Environment,
+    Target,
+    carbon_model,
+    pack_infra,
+    paper_fleet,
+    tpu_fleet,
+)
+from repro.core.carbon_model import evaluate, evaluate_energy, feasible
+from repro.core.workloads import ALL_PAPER_WORKLOADS, Workload, by_name
+
+INFRA = pack_infra(paper_fleet(), "act")
+INFRA_LCA = pack_infra(paper_fleet(), "lca")
+ENV = Environment.make(300.0, 350.0, 280.0, 320.0)
+
+
+def _w(flops=1e9, mem=1e7, din=1e5, dout=1e4, lat=0.1, cont=0.0, fps=0.0):
+    return Workload.make(flops, mem, din, dout, lat, cont, fps)
+
+
+class TestTable1Structure:
+    def test_shapes(self):
+        b = evaluate(_w(), INFRA, ENV)
+        assert b.op_cf.shape == (3, 5)
+        assert b.emb_cf.shape == (3, 5)
+        assert b.latency.shape == (3,)
+
+    def test_nonnegative(self):
+        b = evaluate(_w(), INFRA, ENV)
+        assert bool((b.op_cf >= 0).all()) and bool((b.emb_cf >= 0).all())
+
+    def test_uninvolved_components_are_zero(self):
+        """Table 1: '-' cells. Mobile target involves no network carbon;
+        Edge-DC target involves no core-network carbon."""
+        b = evaluate(_w(), INFRA, ENV)
+        M, E, H = Target.MOBILE, Target.EDGE_DC, Target.HYPERSCALE_DC
+        EN, CN = 1, 3  # Component.EDGE_NETWORK, CORE_NETWORK
+        assert b.op_cf[M, EN] == 0 and b.op_cf[M, CN] == 0
+        assert b.emb_cf[M, EN] == 0 and b.emb_cf[M, CN] == 0
+        assert b.op_cf[E, CN] == 0 and b.emb_cf[E, CN] == 0
+        # Hyperscale target touches everything
+        assert bool((b.op_cf[H] > 0).all())
+
+    def test_latency_ordering_structure(self):
+        """Offload latency = comm + compute: DC latency includes both hops."""
+        b = evaluate(_w(), INFRA, ENV)
+        assert b.latency[2] >= b.t_comm[0] + b.t_comm[1]
+        assert b.latency[1] >= b.t_comm[0]
+
+
+class TestCarbonProperties:
+    @hypothesis.given(
+        flops=st.floats(1e6, 1e12), din=st.floats(1e2, 1e7),
+        ci_scale=st.floats(0.1, 3.0))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_operational_cf_linear_in_ci(self, flops, din, ci_scale):
+        """Operational CF is linear in carbon intensity (Table 1)."""
+        w = _w(flops=flops, din=din)
+        b1 = evaluate(w, INFRA, ENV)
+        env2 = Environment(ci=ENV.ci * ci_scale, interference=ENV.interference,
+                           net_slowdown=ENV.net_slowdown)
+        b2 = evaluate(w, INFRA, env2)
+        np.testing.assert_allclose(np.asarray(b2.op_cf),
+                                   np.asarray(b1.op_cf) * ci_scale,
+                                   rtol=1e-5)
+        # embodied CF does not depend on CI
+        np.testing.assert_allclose(np.asarray(b2.emb_cf),
+                                   np.asarray(b1.emb_cf), rtol=1e-6)
+
+    @hypothesis.given(flops=st.floats(1e6, 1e13))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_cf_monotone_in_flops(self, flops):
+        """More compute never reduces carbon (fixed everything else)."""
+        b1 = evaluate(_w(flops=flops), INFRA, ENV)
+        b2 = evaluate(_w(flops=flops * 2), INFRA, ENV)
+        assert bool((b2.total_cf >= b1.total_cf - 1e-9).all())
+
+    @hypothesis.given(n_user=st.floats(2.0, 1e4))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_sharing_amortizes_edge_dc(self, n_user):
+        """More users co-sharing the edge DC -> lower per-user edge CF."""
+        w = _w()
+        few = evaluate(w, INFRA, ENV)
+        many = evaluate(w, INFRA.replace(
+            n_user_edge=jnp.asarray(float(INFRA.n_user_edge) * n_user)), ENV)
+        assert float(many.total_cf[1]) <= float(few.total_cf[1]) + 1e-9
+
+    @hypothesis.given(interf=st.floats(1.0, 8.0))
+    @hypothesis.settings(max_examples=30, deadline=None)
+    def test_interference_slows_and_dirties(self, interf):
+        """Co-located interference scales T_comp -> latency and CF rise."""
+        env = Environment.make(300.0, 350.0, 280.0, 320.0,
+                               interference=(interf, 1.0, 1.0))
+        b0 = evaluate(_w(), INFRA, ENV)
+        b1 = evaluate(_w(), INFRA, env)
+        assert float(b1.latency[0]) >= float(b0.latency[0])
+        assert float(b1.total_cf[0]) >= float(b0.total_cf[0]) - 1e-9
+
+    def test_energy_is_ci_independent(self):
+        w = _w()
+        e1 = evaluate_energy(w, INFRA, ENV)
+        env2 = Environment(ci=ENV.ci * 7.0, interference=ENV.interference,
+                           net_slowdown=ENV.net_slowdown)
+        e2 = evaluate_energy(w, INFRA, env2)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-6)
+
+
+class TestFeasibility:
+    def test_impossible_latency(self):
+        w = _w(flops=1e15, lat=1e-4)
+        b = evaluate(w, INFRA, ENV)
+        assert not bool(feasible(b, w).any())
+
+    def test_streaming_needs_fps(self):
+        """A stream whose per-frame payload exceeds frame-time bandwidth is
+        infeasible on offload targets but fine locally."""
+        w = by_name("fortnite").workload
+        b = evaluate(w, INFRA, ENV)
+        ok = feasible(b, w)
+        assert bool(ok[0])  # local play always feasible
+
+    def test_pick_target_falls_back(self):
+        """When nothing is feasible the pick is still a valid target
+        (paper Fig 10c behaviour)."""
+        w = _w(flops=1e16, lat=1e-5)
+        b = evaluate(w, INFRA, ENV)
+        t = carbon_model.optimal_target(b, w)
+        assert 0 <= int(t) <= 2
+
+
+class TestEmbodiedModels:
+    def test_act_below_lca(self):
+        """Paper §4.3: ACT estimates ~28% below the LCA reports."""
+        w = _w()
+        b_act = evaluate(w, INFRA, ENV)
+        b_lca = evaluate(w, INFRA_LCA, ENV)
+        act_emb = float(b_act.emb_cf[0].sum())
+        lca_emb = float(b_lca.emb_cf[0].sum())
+        assert act_emb < lca_emb
+
+    def test_act_model_bottom_up(self):
+        from repro.core.embodied import act_fleet_embodied_g
+        est = act_fleet_embodied_g()
+        # sanity: phone O(10kg), servers O(100kg-1t)
+        assert 5e3 < est["pixel3"] < 1e5
+        assert 1e5 < est["p3.2xlarge-v100"] < 1e7
+
+
+class TestTpuFleet:
+    def test_router_fleet_packs(self):
+        infra = pack_infra(tpu_fleet(), "act")
+        b = evaluate(_w(flops=1e12), infra, ENV)
+        assert bool(jnp.isfinite(b.total_cf).all())
+
+
+def test_all_paper_workloads_evaluate():
+    for info in ALL_PAPER_WORKLOADS:
+        b = evaluate(info.workload, INFRA, ENV)
+        assert bool(jnp.isfinite(b.total_cf).all()), info.name

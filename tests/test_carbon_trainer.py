@@ -1,0 +1,84 @@
+"""CarbonAwareTrainer policy tests (temporal/spatial shifting, elastic)."""
+
+import numpy as np
+
+from repro.core import Grid, grid_trace
+from repro.train.carbon_aware import (
+    CarbonAwareTrainer,
+    CarbonSchedule,
+    PodSpec,
+)
+
+
+def _pods():
+    return [PodSpec(name="ciso", trace=grid_trace(Grid.CISO), chips=64,
+                    embodied_g=64 * 0.9e6),
+            PodSpec(name="rural", trace=grid_trace(Grid.RURAL), chips=64,
+                    embodied_g=64 * 0.9e6)]
+
+
+def test_carbon_aware_beats_always_on():
+    tr = CarbonAwareTrainer(pods=_pods(), steps_per_hour_full=500)
+    ledger = tr.run(total_steps=5000, start_hour=0)
+    done = sum(r.steps for r in ledger)
+    assert done == 5000
+    aware = tr.total_carbon(ledger)
+    base, _ = tr.baseline_carbon(5000)
+    assert aware < base
+    savings = 1 - aware / base
+    assert savings > 0.10  # the whole point of the feature
+
+
+def test_pauses_on_dirty_hours():
+    sched = CarbonSchedule(pause_threshold=100.0, elastic=False)  # aggressive
+    tr = CarbonAwareTrainer(pods=_pods()[:1], schedule=sched,
+                            steps_per_hour_full=500)
+    ledger = tr.run(total_steps=2000, start_hour=20)  # night on CISO: dirty
+    actions = [r.action for r in ledger]
+    assert "pause" in actions
+    assert sum(r.steps for r in ledger) == 2000
+
+
+def test_migrates_to_cleaner_pod():
+    sched = CarbonSchedule(migrate_min_ci_gap=10.0)
+    tr = CarbonAwareTrainer(pods=_pods(), schedule=sched,
+                            steps_per_hour_full=1000)
+    ledger = tr.run(total_steps=8000, start_hour=18)
+    pods = {r.pod for r in ledger if r.action != "pause"}
+    assert "rural" in pods  # rural grid is cleaner most hours
+
+
+def test_deadline_forces_progress():
+    """With a deadline, the trainer must not pause its way past it."""
+    sched = CarbonSchedule(pause_threshold=50.0, deadline_h=12,
+                           min_dp_frac=0.25)
+    tr = CarbonAwareTrainer(pods=_pods()[:1], schedule=sched,
+                            steps_per_hour_full=1000)
+    ledger = tr.run(total_steps=6000, start_hour=0)
+    hours = len(ledger)
+    assert sum(r.steps for r in ledger) == 6000
+    assert hours <= 14  # deadline_h + small slack from integer steps
+
+
+def test_elastic_width_tracks_ci():
+    tr = CarbonAwareTrainer(pods=_pods()[:1], steps_per_hour_full=500)
+    ledger = tr.run(total_steps=4000, start_hour=0)
+    rows = [r for r in ledger if r.action != "pause"]
+    clean = [r.dp_frac for r in rows if r.ci < 150]
+    dirty = [r.dp_frac for r in rows if r.ci > 350]
+    if clean and dirty:
+        assert np.mean(clean) > np.mean(dirty)
+
+
+def test_step_hook_drives_real_training():
+    """The hook integration: each hour's planned steps reach the hook."""
+    seen = []
+
+    def hook(pod_idx, n_steps, dp_frac):
+        seen.append((pod_idx, n_steps, dp_frac))
+        return n_steps
+
+    tr = CarbonAwareTrainer(pods=_pods(), steps_per_hour_full=100)
+    ledger = tr.run(total_steps=500, step_hook=hook)
+    assert sum(n for _, n, _ in seen) == 500
+    assert len(seen) == len([r for r in ledger if r.action != "pause"])

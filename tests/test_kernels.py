@@ -1,0 +1,139 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties vs the
+pure-jnp oracles (interpret=True executes the Pallas bodies on CPU)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=5e-4, rtol=5e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,sq,sk,h,hkv,d,window",
+        [(2, 64, 64, 4, 2, 32, None),
+         (1, 128, 128, 8, 8, 64, None),
+         (2, 64, 64, 4, 1, 16, 16),
+         (1, 96, 96, 6, 3, 32, 32),
+         (1, 256, 256, 2, 1, 128, None)])
+    def test_sweep(self, dtype, b, sq, sk, h, hkv, d, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+        k = jax.random.normal(ks[1], (b, sk, hkv, d), dtype)
+        v = jax.random.normal(ks[2], (b, sk, hkv, d), dtype)
+        out = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  block_q=32, block_k=32)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    @hypothesis.given(
+        seed=st.integers(0, 2**16), bq=st.sampled_from([16, 32, 64]),
+        bk=st.sampled_from([16, 32, 64]))
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_block_shape_invariance(self, seed, bq, bk):
+        """Output must not depend on the BlockSpec tiling."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(k1, (1, 64, 4, 32))
+        k = jax.random.normal(k2, (1, 64, 2, 32))
+        v = jax.random.normal(k3, (1, 64, 2, 32))
+        a = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+        b = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,s,h,p,n,chunk,block_h",
+        [(2, 64, 8, 16, 16, 16, 4),
+         (1, 128, 16, 32, 32, 32, 8),
+         (2, 96, 4, 8, 8, 24, 4),
+         (1, 64, 8, 64, 128, 16, 8)])
+    def test_sweep(self, dtype, b, s, h, p, n, chunk, block_h):
+        ks = jax.random.split(KEY, 6)
+        x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (b, s, 1, n))
+        Cm = jax.random.normal(ks[4], (b, s, 1, n))
+        D = jax.random.normal(ks[5], (h,))
+        y, sf = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk,
+                             block_h=block_h)
+        yr, sr = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+        tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+            dict(atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **tol)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                                   atol=5e-3, rtol=5e-3)
+
+    def test_initial_state(self):
+        ks = jax.random.split(KEY, 7)
+        b, s, h, p, n = 1, 32, 4, 8, 16
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+        Bm = jax.random.normal(ks[3], (b, s, 1, n))
+        Cm = jax.random.normal(ks[4], (b, s, 1, n))
+        D = jax.random.normal(ks[5], (h,))
+        s0 = jax.random.normal(ks[6], (b, h, p, n))
+        y, sf = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=8, initial_state=s0)
+        yr, sr = ref.ssd_ref(x, dt, A, Bm, Cm, D, initial_state=s0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sr),
+                                   atol=5e-4, rtol=5e-4)
+
+
+class TestGroupedMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("e,c,d,f", [(4, 32, 64, 48), (8, 16, 32, 32),
+                                         (2, 128, 128, 128), (16, 8, 16, 8)])
+    def test_sweep(self, dtype, e, c, d, f):
+        k1, k2 = jax.random.split(KEY)
+        x = jax.random.normal(k1, (e, c, d), dtype)
+        w = jax.random.normal(k2, (e, d, f), dtype)
+        out = ops.grouped_matmul(x, w, block_c=16, block_f=16, block_d=16)
+        want = ref.grouped_matmul_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @hypothesis.given(seed=st.integers(0, 2**16),
+                      bd=st.sampled_from([8, 16, 32, 64]))
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_contraction_block_invariance(self, seed, bd):
+        """fp32 accumulation must make the d-tiling invisible."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (2, 32, 64))
+        w = jax.random.normal(k2, (2, 64, 32))
+        a = ops.grouped_matmul(x, w, block_d=bd)
+        b = ops.grouped_matmul(x, w, block_d=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestFusedRMSNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(4, 37, 96), (2, 128), (1, 8, 8, 64)])
+    def test_sweep(self, dtype, shape):
+        k1, k2 = jax.random.split(KEY)
+        x = jax.random.normal(k1, shape, dtype)
+        s = jax.random.normal(k2, (shape[-1],))
+        out = ops.fused_rmsnorm(x, s)
+        want = ref.rmsnorm_ref(x, s)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))

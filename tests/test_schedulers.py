@@ -1,0 +1,98 @@
+"""Scheduler-family tests (paper §5.4 / Fig 14)."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_scenarios, explore, paper_fleet
+from repro.core.carbon_intensity import ChargingBehavior, Grid
+from repro.core.design_space import ScenarioAxes
+from repro.core.schedulers import (
+    BOScheduler,
+    ClassificationScheduler,
+    EnergyAwareScheduler,
+    OracleScheduler,
+    RLScheduler,
+    RegressionScheduler,
+    build_dataset,
+    evaluate_scheduler,
+)
+from repro.core.workloads import ALL_PAPER_WORKLOADS
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    axes = ScenarioAxes(hours=tuple(range(0, 24, 2)))
+    table = build_scenarios(paper_fleet(), axes)
+    res = explore(ALL_PAPER_WORKLOADS, table)
+    ds = build_dataset(ALL_PAPER_WORKLOADS, res, table)
+    return ds.split(test_frac=0.25, seed=0)
+
+
+def test_oracle_is_perfect(dataset):
+    train, test = dataset
+    ev = evaluate_scheduler(OracleScheduler(), train, test)
+    assert ev.accuracy == 1.0
+    assert ev.cf_degradation == 0.0
+
+
+def test_learned_schedulers_beat_chance(dataset):
+    train, test = dataset
+    for s in (RegressionScheduler(), ClassificationScheduler(),
+              BOScheduler(budget=96), RLScheduler()):
+        ev = evaluate_scheduler(s, train, test)
+        assert ev.accuracy > 0.40, (s.name, ev.accuracy)
+
+
+def test_rl_learns_nonlinear_features(dataset):
+    """Fig 14: RL adapts to CI/variance regimes (beats linear regression)."""
+    train, test = dataset
+    rl = evaluate_scheduler(RLScheduler(), train, test)
+    reg = evaluate_scheduler(RegressionScheduler(), train, test)
+    assert rl.cf_degradation < reg.cf_degradation
+
+
+def test_overhead_accuracy_tradeoff_exists(dataset):
+    """The benchmark must expose distinct overhead/accuracy points."""
+    train, test = dataset
+    evs = [evaluate_scheduler(s, train, test)
+           for s in (RegressionScheduler(), ClassificationScheduler(),
+                     BOScheduler(budget=96), RLScheduler())]
+    overheads = {round(e.flops_per_decision, 1) for e in evs}
+    assert len(overheads) >= 3  # distinct trade-off points
+
+
+def test_energy_oracle_leaves_carbon_on_table(dataset):
+    """Fig 6: energy-optimal picks carry more carbon than carbon-optimal."""
+    train, test = dataset
+    n = np.arange(len(test.labels))
+    eopt = np.argmin(np.where(test.feasible, test.energy, np.inf), axis=1)
+    eopt = np.where(np.isfinite(
+        np.take_along_axis(np.where(test.feasible, test.energy, np.inf),
+                           eopt[:, None], 1)).ravel(), eopt, test.labels)
+    cf_energy_picks = test.total_cf[n, eopt].mean()
+    cf_carbon_picks = test.total_cf[n, test.labels].mean()
+    assert cf_energy_picks >= cf_carbon_picks
+
+
+def test_rl_has_lowest_qos_violations(dataset):
+    """The RL agent experiences latency misses in its cost -> near-oracle
+    violation rate (Fig 14's accuracy story)."""
+    train, test = dataset
+    rl = evaluate_scheduler(RLScheduler(), train, test)
+    reg = evaluate_scheduler(RegressionScheduler(), train, test)
+    cls = evaluate_scheduler(ClassificationScheduler(), train, test)
+    assert rl.qos_violation_rate <= reg.qos_violation_rate
+    assert rl.qos_violation_rate <= cls.qos_violation_rate + 1e-6
+
+
+def test_fig6_gap_magnitude(dataset):
+    """Oracle-carbon vs oracle-energy picks: max saving should be tens of
+    percent (paper: up to 29.1%)."""
+    train, test = dataset
+    n = np.arange(len(test.labels))
+    eopt = np.argmin(np.where(test.feasible, test.energy, np.inf), axis=1)
+    cf_carbon = test.total_cf[n, test.labels]
+    cf_energy = test.total_cf[n, eopt]
+    saving = 1 - cf_carbon / np.maximum(cf_energy, 1e-12)
+    assert saving.max() > 0.10
+    assert (saving >= -1e-6).all()  # carbon oracle never loses

@@ -1,0 +1,168 @@
+"""Training substrate tests: optimizer, microbatching, compression numerics,
+end-to-end learning."""
+
+import math
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig, ShapeKind
+from repro.data import SyntheticLM, batch_for
+from repro.models import init_params
+from repro.train.optimizer import (
+    adamw,
+    clip_by_global_norm,
+    constant_lr,
+    global_norm,
+    warmup_cosine,
+)
+from repro.train.train_step import (
+    _grads_over_microbatches,
+    init_train_state,
+    make_train_step,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestOptimizer:
+    def test_adamw_matches_reference(self):
+        """One AdamW step on a tiny problem vs hand-computed numpy."""
+        lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.0
+        opt = adamw(constant_lr(lr), b1=b1, b2=b2, eps=eps, weight_decay=wd,
+                    max_grad_norm=1e9)
+        p = {"w": jnp.asarray([[1.0, -2.0]])}
+        g = {"w": jnp.asarray([[0.5, 0.3]])}
+        state = opt.init(p)
+        newp, state, _ = opt.update(g, state, p)
+        m = 0.1 * np.array([[0.5, 0.3]])
+        v = 0.05 * np.array([[0.5, 0.3]]) ** 2
+        mh, vh = m / 0.1, v / 0.05
+        want = np.array([[1.0, -2.0]]) - lr * mh / (np.sqrt(vh) + eps)
+        np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+
+    def test_weight_decay_only_on_matrices(self):
+        opt = adamw(constant_lr(0.1), weight_decay=0.5, max_grad_norm=1e9)
+        p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+        g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+        state = opt.init(p)
+        newp, _, _ = opt.update(g, state, p)
+        assert float(newp["w"][0, 0]) < 1.0  # decayed
+        np.testing.assert_allclose(np.asarray(newp["b"]), 1.0)  # not decayed
+
+    @hypothesis.given(scale=st.floats(0.1, 100.0))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_clip_bounds_norm(self, scale):
+        tree = {"a": jnp.ones((4,)) * scale, "b": -jnp.ones((3,)) * scale}
+        clipped, _ = clip_by_global_norm(tree, 1.0)
+        assert float(global_norm(clipped)) <= 1.0 + 1e-4
+
+    def test_warmup_cosine_shape(self):
+        lr = warmup_cosine(1.0, 10, 100)
+        assert float(lr(jnp.asarray(0))) == 0.0
+        assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(lr(jnp.asarray(50))) < 1.0
+        assert float(lr(jnp.asarray(100))) >= 0.1 - 1e-6  # final_frac floor
+
+
+class TestMicrobatching:
+    def test_grad_equivalence(self):
+        """k microbatches must give the same mean gradient as one batch."""
+        cfg = get_config("deepseek-7b", smoke=True)
+        params = init_params(KEY, cfg, dtype=jnp.float32)
+        shape = ShapeConfig("t", ShapeKind.TRAIN, 32, 8)
+        batch = batch_for(cfg, shape, step=0)
+        g1, _ = _grads_over_microbatches(params, batch, cfg, microbatches=1,
+                                         remat="none", use_pallas=False)
+        g4, _ = _grads_over_microbatches(params, batch, cfg, microbatches=4,
+                                         remat="none", use_pallas=False)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b), atol=2e-4, rtol=2e-3)
+
+    def test_remat_grad_equivalence(self):
+        """Remat must not change gradients, only memory/compute."""
+        cfg = get_config("h2o-danube-1.8b", smoke=True)
+        params = init_params(KEY, cfg, dtype=jnp.float32)
+        batch = batch_for(cfg, ShapeConfig("t", ShapeKind.TRAIN, 32, 4),
+                          step=0)
+        g0, _ = _grads_over_microbatches(params, batch, cfg, microbatches=1,
+                                         remat="none", use_pallas=False)
+        g1, _ = _grads_over_microbatches(params, batch, cfg, microbatches=1,
+                                         remat="minimal", use_pallas=False)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+class TestCompressionNumerics:
+    """Error-feedback quantization (the shard_map path needs >1 device, so
+    the *numerics* are tested directly; the distributed path is exercised in
+    the dry-run)."""
+
+    @hypothesis.given(seed=st.integers(0, 1000))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_int8_error_feedback_accumulates(self, seed):
+        """Sum of sent values + final residual == sum of true gradients."""
+        rng = np.random.default_rng(seed)
+        g_seq = rng.normal(size=(20, 8)).astype(np.float32)
+        e = np.zeros(8, np.float32)
+        sent_total = np.zeros(8, np.float32)
+        for g in g_seq:
+            comp = g + e
+            scale = max(np.abs(comp).max(), 1e-12) / 127.0
+            q = np.clip(np.round(comp / scale), -127, 127)
+            sent = q * scale
+            e = comp - sent
+            sent_total += sent
+        np.testing.assert_allclose(sent_total + e, g_seq.sum(0), rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_int8_quantization_error_bounded(self):
+        g = np.linspace(-3, 3, 101).astype(np.float32)
+        scale = np.abs(g).max() / 127.0
+        q = np.clip(np.round(g / scale), -127, 127) * scale
+        assert np.abs(q - g).max() <= scale / 2 + 1e-7
+
+
+class TestEndToEnd:
+    def test_loss_drops_on_markov_language(self):
+        cfg = get_config("deepseek-7b", smoke=True)
+        params = init_params(KEY, cfg, dtype=jnp.float32)
+        opt = adamw(warmup_cosine(3e-3, 10, 60))
+        state = init_train_state(params, opt)
+        step = jax.jit(make_train_step(cfg, opt))
+        shape = ShapeConfig("t", ShapeKind.TRAIN, 64, 8)
+        losses = []
+        for i in range(25):
+            state, m = step(state, batch_for(cfg, shape, step=i))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.85 * math.log(cfg.vocab_size)
+        assert losses[-1] < losses[0]
+
+    def test_data_pipeline_determinism_and_sharding(self):
+        cfg = get_config("deepseek-7b", smoke=True)
+        shape = ShapeConfig("t", ShapeKind.TRAIN, 16, 8)
+        b1 = batch_for(cfg, shape, step=3)
+        b2 = batch_for(cfg, shape, step=3)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        # shard-awareness: different shards give different tokens
+        s0 = batch_for(cfg, shape, step=3, shard=0, n_shards=2)
+        s1 = batch_for(cfg, shape, step=3, shard=1, n_shards=2)
+        assert s0["tokens"].shape[0] == 4
+        assert not np.array_equal(np.asarray(s0["tokens"]),
+                                  np.asarray(s1["tokens"]))
+
+    def test_language_is_learnable_structure(self):
+        lang = SyntheticLM(vocab=64)
+        toks = np.asarray(lang.sample_tokens(0, 0, 8, 128))
+        succ = np.asarray(lang.transition_successors())
+        # every bigram must be a valid transition
+        for row in toks:
+            for a, b in zip(row[:-1], row[1:]):
+                assert b in succ[a]

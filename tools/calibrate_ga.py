@@ -1,0 +1,126 @@
+"""GA refinement over calibrate_fleet_fast's constraint system.
+
+The paper-claim constraints split into two clusters that random search
+satisfies only separately (the E-favoring Fig-5/11 cluster vs the
+resnet->D / Fig-7 mobile-feasibility cluster). Uniform crossover between
+elites from both families merges them.
+
+Run:  PYTHONPATH=src python tools/calibrate_ga.py --rounds 120
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import tools.calibrate_fleet_fast as C
+
+# analytic point: mobile flops-fast (resnet feasible at 31.5ms) with high
+# per-second carbon rate; squeezenet/mobilenet M-E crossover via e0 window
+HAND = {
+    'mob_eff': 34e9, 'mob_bw': 34e9, 'mob_pcomp': 6.0, 'mob_pcomm': 1.2,
+    'mob_pidle': 0.45,
+    'jet_eff': 0.81e12, 'jet_bw': 41e9, 'jet_pcomp': 10.0,
+    'jet_ecf_act': 2e4,
+    'edge_eff': 0.73e12, 'edge_pcomp': 700.0, 'edge_pidle': 15.0,
+    'dc_eff': 30e12, 'dc_pcomp': 7000.0, 'dc_pidle': 700.0,
+    'n_user_edge': 27.0, 'n_user_dc': 4096.0, 'n_batch': 16.0,
+    'bs_power': 1161.0, 'bs_users': 1500.0,
+    'bw_edge': 18.76e6, 'lat_edge': 0.0035, 'bw_core': 104e6,
+    'lat_core': 0.0125, 'rural_extra': 0.0148,
+    'mob_ecf_act': 2e4, 'edge_ecf': 1e6, 'dc_ecf': 3e6,
+    'resnet_dsp': 4.5, 'inception_dsp': 1.0,
+    'interf_m': 4.26, 'interf_e': 2.96, 'interf_dc': 1.17,
+    'weak_edge': 8.0, 'congest_core': 5.64,
+}
+
+BEST25 = {  # GA soft-margin best (26/29)
+    'mob_eff': 37500809216.0, 'mob_bw': 34221035520.0,
+    'mob_pcomp': 2.7385499477386475, 'mob_pcomm': 1.2062026262283325,
+    'mob_pidle': 0.4184238910675049, 'edge_eff': 728110465024.0,
+    'edge_pcomp': 700.0, 'edge_pidle': 15.0, 'dc_eff': 30000000532480.0,
+    'dc_pcomp': 7000.0, 'dc_pidle': 700.0,
+    'n_user_edge': 27.006574630737305, 'n_user_dc': 4096.0,
+    'n_batch': 16.0, 'bs_power': 1161.205810546875, 'bs_users': 1500.0,
+    'bw_edge': 18758550.0, 'lat_edge': 0.0034793822560459375,
+    'bw_core': 104133024.0, 'lat_core': 0.012541992589831352,
+    'rural_extra': 0.014812859706580639, 'mob_ecf_act': 5000.0,
+    'edge_ecf': 1000000.0, 'dc_ecf': 3000000.0,
+    'jet_eff': 810334879744.0, 'jet_bw': 41376980992.0,
+    'jet_pcomp': 10.0, 'jet_ecf_act': 20000.0,
+    'resnet_dsp': 4.5, 'inception_dsp': 1.0,
+    'interf_m': 4.2596821784973145, 'interf_e': 2.9551472663879395,
+    'interf_dc': 1.168281078338623, 'weak_edge': 8.0,
+    'congest_core': 5.643731594085693,
+}
+
+
+def vec(d):
+    return jnp.asarray([d[k] for k in C.KEYS])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8192)
+    ap.add_argument("--elites", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    span = C.HI - C.LO
+    seeds = jnp.stack([vec(HAND), vec(BEST25)])
+    elites = jnp.concatenate([seeds] * (args.elites // 2))[:args.elites]
+    elite_scores = C.score_batch(elites)
+    best_s = int(elite_scores.max())
+    print(f"[seed] best {best_s}/{len(C.CONSTRAINT_NAMES)}")
+
+    n = args.batch
+    for r in range(args.rounds):
+        key, k1, k2, k3, k4, k5 = jax.random.split(key, 6)
+        third = n // 3
+        # (a) crossover: uniform gene mix of two random elites
+        pa = jax.random.randint(k1, (third,), 0, elites.shape[0])
+        pb = jax.random.randint(k2, (third,), 0, elites.shape[0])
+        mask = jax.random.bernoulli(k3, 0.5, (third, len(C.KEYS)))
+        cross = jnp.where(mask, elites[pa], elites[pb])
+        # (b) mutation around elites, annealed, sparse coordinates
+        pm = jax.random.randint(k4, (third,), 0, elites.shape[0])
+        scale = 0.2 * 0.97 ** r + 0.005
+        noise = (jax.random.uniform(k5, (third, len(C.KEYS))) - 0.5) \
+            * span * scale
+        kmut = jax.random.bernoulli(k3, 0.3, (third, len(C.KEYS)))
+        mut = jnp.clip(elites[pm] + noise * kmut, C.LO, C.HI)
+        # (c) fresh random
+        rand = C.LO + jax.random.uniform(k4, (n - 2 * third,
+                                              len(C.KEYS))) * span
+        xs = jnp.concatenate([cross, mut, rand])
+        scores = C.score_batch(xs)
+        xs = jnp.concatenate([xs, elites])
+        scores = jnp.concatenate([scores, elite_scores])
+        order = jnp.argsort(-scores)[:args.elites]
+        elites, elite_scores = xs[order], scores[order]
+        if int(elite_scores[0]) > best_s:
+            best_s = int(elite_scores[0])
+            print(f"[round {r}] best {best_s}/{len(C.CONSTRAINT_NAMES)}",
+                  flush=True)
+        if best_s == len(C.CONSTRAINT_NAMES):
+            break
+
+    best_x = elites[0]
+    cons = np.asarray(C.cons_batch(best_x[None]))[0]
+    print(f"\nFINAL {best_s}/{len(C.CONSTRAINT_NAMES)}")
+    for name, ok in zip(C.CONSTRAINT_NAMES, cons):
+        if not ok:
+            print("  MISS", name)
+    print("\nparams = {")
+    for i, k in enumerate(C.KEYS):
+        print(f"    {k!r}: {float(best_x[i])!r},")
+    print("}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the §Dry-run + §Roofline markdown tables from a dry-run JSON.
+
+Run:  PYTHONPATH=src:. python tools/render_roofline.py artifacts/dryrun_baseline.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import analyze
+
+
+def fmt_seconds(x: float) -> str:
+    return f"{x:.3g}"
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        records = json.load(f)
+
+    print("### Dry-run matrix\n")
+    print("| arch | shape | mesh | kind | HLO FLOPs/dev | HLO bytes/dev | "
+          "coll bytes/dev | peak GiB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if not r["ok"]:
+            why = "skip (long-context needs sub-quadratic attn)" \
+                if r["error"].startswith("SKIP") else f"FAIL {r['error'][:60]}"
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['kind']} | {why} | | | | |")
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+              f"{r['flops']:.3e} | {r['hlo_bytes']:.3e} | "
+              f"{r['collectives'].get('total', 0):.3e} | "
+              f"{r['peak_mem_per_device'] / 2**30:.2f} | "
+              f"{r['compile_s']:.0f} |")
+
+    print("\n### Roofline terms (single-pod 16x16; per-step seconds)\n")
+    print("| arch | shape | compute s | memory s | collective s | bound | "
+          "MODEL/HLO flops | roofline frac | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r["mesh"] != "16x16":
+            continue
+        rr = analyze(r)
+        if rr is None:
+            continue
+        dominant = max(rr.t_compute, rr.t_memory, rr.t_collective)
+        # roofline fraction: ideal model-compute time / dominant achieved
+        ideal = rr.model_flops / (rr.chips * 197e12)
+        frac = ideal / max(dominant, 1e-30)
+        print(f"| {rr.arch} | {rr.shape} | {fmt_seconds(rr.t_compute)} | "
+              f"{fmt_seconds(rr.t_memory)} | {fmt_seconds(rr.t_collective)} | "
+              f"{rr.bottleneck} | {rr.useful_ratio:.2f} | {frac:.2f} | "
+              f"{rr.peak_mem_gib:.1f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         "artifacts/dryrun_baseline.json")
