@@ -1,0 +1,105 @@
+"""Router throughput: batched vmap routing vs the scalar per-request loop.
+
+The scalar path pays one jitted call + host sync per request; the batched
+path routes the whole stream in one vmapped call. Scalar cost is measured
+on a subsample (per-request cost is constant — same jitted function every
+call) and the speedup is reported at the full request count.
+
+Run:  PYTHONPATH=src python -m benchmarks.router_throughput [--n 10000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.configs import get_config
+from repro.core.carbon_model import Environment
+from repro.serve import FleetRouter, GreenScaleRouter, Request, RequestBatch
+
+ARCH = "h2o-danube-1.8b"
+
+
+def synthetic_batch(n: int, seed: int = 0) -> RequestBatch:
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(16, 4096, n).astype(np.float64)
+    new = rng.integers(8, 512, n).astype(np.float64)
+    budget = rng.choice([0.5, 2.0, 10.0], n)
+    # big prompts never fit on-device (the 72B-style availability mask)
+    avail = np.ones((n, 3), bool)
+    avail[:, 0] = prompt < 2048
+    return RequestBatch(prompt_tokens=prompt, max_new_tokens=new,
+                        latency_budget_s=budget,
+                        bytes_per_token=np.full(n, 4.0), available=avail)
+
+
+def run(n: int = 10_000, scalar_sample: int = 256) -> list[BenchRow]:
+    cfg = get_config(ARCH)
+    router = GreenScaleRouter(cfg)
+    env = Environment.make(300.0, 350.0, 280.0, 320.0)
+    batch = synthetic_batch(n)
+
+    reqs = [Request(prompt_tokens=int(batch.prompt_tokens[i]),
+                    max_new_tokens=int(batch.max_new_tokens[i]),
+                    latency_budget_s=float(batch.latency_budget_s[i]),
+                    available=tuple(bool(x) for x in batch.available[i]))
+            for i in range(scalar_sample)]
+    router.route(reqs[0], env)  # compile/warm the scalar path
+    t0 = time.perf_counter()
+    for r in reqs:
+        router.route(r, env)
+    scalar_us = (time.perf_counter() - t0) / scalar_sample * 1e6
+
+    out = router.route_batch_arrays(batch, env)  # compile/warm
+    jax.block_until_ready(out.target)
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = router.route_batch_arrays(batch, env)
+    jax.block_until_ready(out.target)
+    batched_us = (time.perf_counter() - t0) / reps / n * 1e6
+
+    speedup = scalar_us / batched_us
+    rows = [
+        BenchRow("router_scalar", scalar_us,
+                 f"req/s={1e6 / scalar_us:.0f} (sampled n={scalar_sample})"),
+        BenchRow("router_batched", batched_us,
+                 f"req/s={1e6 / batched_us:.0f} (n={n})"),
+        BenchRow("router_batched_speedup", batched_us,
+                 f"{speedup:.0f}x over scalar loop at n={n}"),
+    ]
+
+    fleet = FleetRouter(cfg)
+    rng = np.random.default_rng(1)
+    region = rng.integers(0, len(fleet.regions), n)
+    t_hours = rng.uniform(0.0, 24.0, n)
+    res = fleet.route_stream(batch, region, t_hours)  # compile/warm
+    jax.block_until_ready(res.target)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = fleet.route_stream(batch, region, t_hours)
+    jax.block_until_ready(res.target)
+    fleet_us = (time.perf_counter() - t0) / reps / n * 1e6
+    rows.append(BenchRow(
+        "fleet_router", fleet_us,
+        f"req/s={1e6 / fleet_us:.0f} regions={len(fleet.regions)} "
+        f"saved_vs_latency_g={float(res.saved_vs_latency_g):.3g}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--scalar-sample", type=int, default=256)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(args.n, args.scalar_sample):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

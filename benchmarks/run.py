@@ -20,11 +20,12 @@ def main() -> None:
                     help="dry-run JSON for the roofline table")
     args = ap.parse_args()
 
-    from benchmarks import lm_design_space, roofline
+    from benchmarks import lm_design_space, roofline, router_throughput
     from benchmarks.paper_figures import ALL_FIGS
 
     groups = [(fig.__name__, fig) for fig in ALL_FIGS]
     groups.append(("lm_design_space", lm_design_space.run))
+    groups.append(("router_throughput", router_throughput.run))
     if args.artifact:
         groups.append(("roofline", lambda: roofline.run(args.artifact)))
     else:

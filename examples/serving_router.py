@@ -1,42 +1,91 @@
-"""Serving with the GreenScale router: batched requests, per-hour tier shifts.
+"""Serving with the GreenScale router: from one request to a 1M-request fleet.
 
-Builds a smoke-size model, serves batched generation through the engine,
-and shows the router moving requests between device / edge / cloud tiers as
-the grid's carbon intensity changes through the day — the paper's Fig-5/9
-behaviour live on an LM serving stack.
+Three acts:
 
-Run:  PYTHONPATH=src python examples/serving_router.py [--arch h2o-danube-1.8b]
+  1. The paper's Fig-5/9 behaviour live on an LM serving stack: the router
+     moves request classes between device / edge / cloud tiers as the grid's
+     carbon intensity changes through the day.
+  2. Fleet scale: a synthetic diurnal trace of 1M requests (arrival rate
+     peaking in the evening, multiple regions with distinct grids) routed in
+     one batched call — per-region/per-tier assignment counts and aggregate
+     gCO2 saved vs. the latency- and energy-optimal baselines.
+  3. Admission: a tier-pinned engine admits its slice of the routed batch
+     and actually serves it.
+
+Run:  PYTHONPATH=src python examples/serving_router.py [--requests 1000000]
 """
 
 import argparse
 import collections
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import ChargingBehavior, Grid, grid_trace, mobile_carbon_intensity
 from repro.core.carbon_model import Environment
+from repro.core.constants import Target
 from repro.models import init_params
-from repro.serve import GreenScaleRouter, Request, ServeEngine
+from repro.serve import (
+    FleetRouter,
+    GreenScaleRouter,
+    Request,
+    RequestBatch,
+    ServeEngine,
+)
 
 TARGETS = ("on-device", "edge-DC", "cloud")
+
+
+def diurnal_hours(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Arrival times (hours): sinusoidal daily load peaking at 20:00."""
+    hours = np.arange(24)
+    rate = 1.0 + 0.8 * np.cos((hours - 20.0) / 24.0 * 2 * np.pi)
+    p = rate / rate.sum()
+    return rng.choice(24, n, p=p) + rng.uniform(0.0, 1.0, n)
+
+
+def synthetic_stream(rng: np.random.Generator, n: int) -> RequestBatch:
+    """Mix of chat (short), summarize (long-prefill), and agent (long-decode)
+    request classes; prompts >= 2048 tokens never fit on-device."""
+    cls = rng.choice(3, n, p=[0.7, 0.2, 0.1])
+    prompt = np.select(
+        [cls == 0, cls == 1, cls == 2],
+        [rng.integers(16, 512, n), rng.integers(2048, 16384, n),
+         rng.integers(256, 2048, n)]).astype(np.float64)
+    new = np.select(
+        [cls == 0, cls == 1, cls == 2],
+        [rng.integers(16, 256, n), rng.integers(32, 128, n),
+         rng.integers(256, 1024, n)]).astype(np.float64)
+    budget = np.select([cls == 0, cls == 1, cls == 2],
+                       [np.full(n, 2.0), np.full(n, 20.0), np.full(n, 30.0)])
+    avail = np.ones((n, 3), bool)
+    avail[:, 0] = prompt < 2048
+    return RequestBatch(prompt_tokens=prompt, max_new_tokens=new,
+                        latency_budget_s=budget,
+                        bytes_per_token=np.full(n, 4.0), available=avail)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=1_000_000)
     args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
 
     # --- engine on the smoke config (CPU-sized), router on the full config --
     smoke = get_config(args.arch, smoke=True)
     full = get_config(args.arch)
     key = jax.random.PRNGKey(0)
     params = init_params(key, smoke, dtype=jnp.float32)
-    engine = ServeEngine(smoke, params, max_seq=64)
+    engine = ServeEngine(smoke, params, max_seq=64, tier=int(Target.EDGE_DC))
     router = GreenScaleRouter(full)
 
+    # --- act 1: per-hour tier shifts on three request classes ---------------
     ciso, rural = grid_trace(Grid.CISO), grid_trace(Grid.RURAL)
     ci_mob = float(mobile_carbon_intensity(ChargingBehavior.AVERAGE, ciso))
 
@@ -55,19 +104,46 @@ def main() -> None:
         env = Environment.make(
             ci_mob, float(rural.ci_hourly[hour]),
             float(ciso.ci_hourly.mean()), float(ciso.ci_hourly[hour]))
-        for ri, req in enumerate(requests):
-            d = router.route(req, env)
+        for ri, d in enumerate(router.route_batch(requests, env)):
             day[ri].append(d.target)
     for ri, req in enumerate(requests):
         hist = {TARGETS[t]: day[ri].count(t) for t in range(3)}
         print(f"  class {ri} ({req.prompt_tokens}p/{req.max_new_tokens}g): "
               f"{hist}")
 
-    # --- actually serve a batch through the engine ---------------------------
+    # --- act 2: 1M-request synthetic diurnal trace across the fleet ---------
+    fleet = FleetRouter(full)
+    rng = np.random.default_rng(0)
+    n = args.requests
+    batch = synthetic_stream(rng, n)
+    region = rng.integers(0, len(fleet.regions), n)
+    t_hours = diurnal_hours(rng, n)
+
+    res = fleet.route_stream(batch, region, t_hours)  # compile + route
+    jax.block_until_ready(res.target)
+    t0 = time.perf_counter()
+    res = fleet.route_stream(batch, region, t_hours)
+    jax.block_until_ready(res.target)
+    dt = time.perf_counter() - t0
+
+    print(f"\nfleet-routed {n:,} requests across {len(fleet.regions)} regions "
+          f"in {dt:.3f}s ({n / dt / 1e6:.2f}M req/s):")
+    counts = np.asarray(res.counts)
+    for ri, spec in enumerate(fleet.regions):
+        row = {TARGETS[t]: int(counts[ri, t]) for t in range(3)}
+        print(f"  {spec.name:6s}: {row}")
+    print(f"  carbon: {float(res.total_carbon_g):.4g} gCO2 routed | "
+          f"saves {float(res.saved_vs_latency_g):.4g} g vs latency-optimal, "
+          f"{float(res.saved_vs_energy_g):.4g} g vs energy-optimal")
+
+    # --- act 3: tier-pinned engine admits its slice and serves a sample -----
+    admitted = engine.admit_indices(res.target)
+    print(f"\nedge-DC engine admits {len(admitted):,}/{n:,} requests "
+          f"({len(admitted) / n:.1%})")
     toks = jax.random.randint(key, (args.batch, 16), 0, smoke.vocab_size)
     out = engine.generate(toks, max_new_tokens=8)
-    print(f"\nengine generated {out.shape[1]} tokens for a batch of "
-          f"{out.shape[0]}: {out[0].tolist()}")
+    print(f"engine generated {out.shape[1]} tokens for a batch of "
+          f"{out.shape[0]} admitted requests: {out[0].tolist()}")
 
 
 if __name__ == "__main__":

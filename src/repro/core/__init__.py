@@ -12,11 +12,17 @@ from repro.core.carbon_intensity import (
 from repro.core.carbon_model import (
     CFBreakdown,
     Environment,
+    RouteOutputs,
     evaluate,
+    evaluate_batch,
     evaluate_energy,
     feasible,
+    feasible_batch,
     optimal_target,
     optimal_targets_all_metrics,
+    route_many,
+    route_many_envs,
+    route_one,
 )
 from repro.core.design_space import (
     DesignSpaceResult,
@@ -48,6 +54,7 @@ from repro.core.workloads import (
     Category,
     Workload,
     WorkloadInfo,
+    batch_workloads,
     by_name,
     stack_workloads,
 )

@@ -263,6 +263,64 @@ def evaluate_energy(w: Workload, infra: InfraParams, env: Environment) -> jax.Ar
     return b.op_cf.sum(-1) * J_PER_KWH
 
 
+# ---------------------------------------------------------------------------
+# Batched entry points (fleet-scale routing: one vmap instead of a Python
+# loop over requests — see repro.serve.router)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RouteOutputs:
+    """Routing result for one request (leading batch axis under vmap).
+
+    ``target`` is the carbon-optimal feasible pick; ``target_latency`` /
+    ``target_energy`` are the latency- and energy-optimal baseline picks the
+    paper compares against (Fig 5), evaluated under the same feasibility set.
+    """
+
+    target: jax.Array  # () int32
+    target_latency: jax.Array  # () int32
+    target_energy: jax.Array  # () int32
+    total_cf: jax.Array  # (3,) gCO2 per execution target
+    latency: jax.Array  # (3,) s per execution target
+    ok: jax.Array  # (3,) bool, feasible & available
+
+
+def route_one(w: Workload, infra: InfraParams, env: Environment,
+              avail: jax.Array) -> RouteOutputs:
+    """Single-request routing core — the scalar unit every batched router
+    vmaps, so batched and per-request decisions agree by construction."""
+    b = evaluate(w, infra, env)
+    ok = feasible(b, w) & avail
+    energy = evaluate_energy(w, infra, env)
+    return RouteOutputs(
+        target=pick_target(b.total_cf, ok, b.total_cf, avail),
+        target_latency=pick_target(b.latency, ok, b.total_cf, avail),
+        target_energy=pick_target(energy, ok, b.total_cf, avail),
+        total_cf=b.total_cf,
+        latency=b.latency,
+        ok=ok,
+    )
+
+
+#: (N,)-batched requests against ONE environment (single-region batch).
+route_many = jax.vmap(route_one, in_axes=(0, None, None, 0))
+
+#: (N,)-batched requests, each against ITS OWN environment (fleet routing:
+#: per-request region/hour CI rows; interference/net_slowdown stay shared).
+route_many_envs = jax.vmap(
+    route_one,
+    in_axes=(0, None, Environment(ci=0, interference=None, net_slowdown=None),
+             0))
+
+#: Table-1 model over a stacked Workload (leading axis) in one environment.
+evaluate_batch = jax.vmap(evaluate, in_axes=(0, None, None))
+
+#: QoS feasibility over stacked breakdowns/workloads (matches evaluate_batch).
+feasible_batch = jax.vmap(feasible, in_axes=(0, 0))
+
+
 def optimal_targets_all_metrics(
     w: Workload, infra: InfraParams, env: Environment,
     avail: jax.Array | None = None,
@@ -272,14 +330,18 @@ def optimal_targets_all_metrics(
     ``avail`` masks the targets a workload can run on at all — e.g. games
     compare the on-device build against the cloud-gaming service (paper §4.1),
     so Edge DC is not in their design space.
+
+    Thin wrapper over ``route_one`` (the single source of pick/fallback
+    semantics); XLA CSE dedupes the repeated evaluate under jit.
     """
     b = evaluate(w, infra, env)
     ok = feasible(b, w)
-    energy = evaluate_energy(w, infra, env)
+    out = route_one(w, infra, env,
+                    jnp.ones_like(ok) if avail is None else avail)
     return {
-        "carbon": pick_target(b.total_cf, ok, b.total_cf, avail),
-        "energy": pick_target(energy, ok, b.total_cf, avail),
-        "latency": pick_target(b.latency, ok, b.total_cf, avail),
+        "carbon": out.target,
+        "energy": out.target_energy,
+        "latency": out.target_latency,
         "breakdown": b,
         "feasible": ok,
     }

@@ -228,9 +228,25 @@ def by_name(name: str) -> WorkloadInfo:
     raise KeyError(name)
 
 
-def stack_workloads(infos: tuple[WorkloadInfo, ...]) -> Workload:
-    """Stack descriptors into one Workload with a leading axis (vmap target)."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *[i.workload for i in infos])
+def stack_workloads(infos) -> Workload:
+    """Stack descriptors into one Workload with a leading axis (vmap target).
+
+    Accepts a sequence of ``WorkloadInfo`` or bare ``Workload`` entries."""
+    ws = [i.workload if isinstance(i, WorkloadInfo) else i for i in infos]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ws)
+
+
+def batch_workloads(*, flops, mem_bytes, data_in, data_out, latency_req,
+                    continuous=0.0, fps_req=0.0,
+                    mobile_eff_scale=1.0) -> Workload:
+    """Vectorized ``Workload.make``: array-valued fields broadcast to one
+    common batch shape, producing a stacked Workload without any Python-level
+    per-request loop (the constructor for million-request streams)."""
+    f = lambda x: jnp.asarray(x, jnp.float32)
+    leaves = [f(x) for x in (flops, mem_bytes, data_in, data_out, latency_req,
+                             continuous, fps_req, mobile_eff_scale)]
+    shape = jnp.broadcast_shapes(*[l.shape for l in leaves])
+    return Workload(*[jnp.broadcast_to(l, shape) for l in leaves])
 
 
 # --- LM workloads (beyond-paper) -----------------------------------------------

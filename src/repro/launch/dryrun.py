@@ -123,6 +123,19 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on recent JAX but a
+    list of per-computation dicts (possibly empty) on older releases —
+    normalize both shapes to one flat dict, summing duplicate keys."""
+    if isinstance(cost, dict):
+        return cost
+    merged: dict = {}
+    for entry in cost or ():
+        for k, v in entry.items():
+            merged[k] = merged.get(k, 0.0) + v
+    return merged
+
+
 # ---------------------------------------------------------------------------
 # Cell lowering
 # ---------------------------------------------------------------------------
@@ -266,7 +279,7 @@ def lower_cell(arch: str, shape_id: str, mesh, *,
 
         compiled = lowered.compile()
         res.compile_s = time.time() - t0
-        cost = compiled.cost_analysis()
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         res.flops = float(cost.get("flops", 0.0))
         res.hlo_bytes = float(cost.get("bytes accessed", 0.0))
         mem = compiled.memory_analysis()

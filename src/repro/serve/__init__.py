@@ -1,4 +1,13 @@
-"""Serving: batched engine + GreenScale per-request router."""
+"""Serving: batched engine + GreenScale per-request and fleet routers."""
 
 from repro.serve.engine import ServeEngine
-from repro.serve.router import GreenScaleRouter, Request, RouteDecision
+from repro.serve.router import (
+    DEFAULT_REGIONS,
+    FleetRouteResult,
+    FleetRouter,
+    GreenScaleRouter,
+    RegionSpec,
+    Request,
+    RequestBatch,
+    RouteDecision,
+)

@@ -20,6 +20,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
@@ -33,6 +34,9 @@ class ServeEngine:
     max_seq: int = 4096
     use_pallas: bool = False
     greedy: bool = True
+    #: execution tier this engine instance serves (Target enum value); None
+    #: means the engine accepts everything (single-tier deployments).
+    tier: int | None = None
 
     def __post_init__(self):
         cfg, use_pallas = self.cfg, self.use_pallas
@@ -51,6 +55,22 @@ class ServeEngine:
 
         self._prefill_fn = _prefill
         self._decode_fn = _decode
+
+    def admit(self, targets) -> jax.Array:
+        """Batched admission hook: boolean mask over a routed batch.
+
+        ``targets`` is the (N,) tier assignment from the router
+        (``RouteOutputs.target`` / ``FleetRouteResult.target``); the engine
+        admits the requests routed to its own tier.
+        """
+        if self.tier is None:
+            return jnp.ones(jnp.asarray(targets).shape, bool)
+        return jnp.asarray(targets) == self.tier
+
+    def admit_indices(self, targets) -> np.ndarray:
+        """Host-side row indices of the admitted requests (gather order is
+        stable, so batch slots map back to stream positions)."""
+        return np.nonzero(np.asarray(self.admit(targets)))[0]
 
     def prefill_batch(self, tokens: jax.Array, **extras
                       ) -> tuple[jax.Array, DecodeState]:

@@ -1,5 +1,5 @@
-"""GreenScaleRouter — per-request execution-target selection (paper Table 1
-applied to LM serving).
+"""GreenScaleRouter — carbon-aware execution-target selection (paper Table 1
+applied to LM serving), from one request to a fleet-scale stream.
 
 Each inference request becomes a GreenScale workload descriptor (FLOPs from
 the request's prefill+decode token counts and the model's active params;
@@ -8,6 +8,18 @@ carbon-optimal tier among {on-device NPU, edge-DC slice, hyperscale pod}
 subject to the request's latency constraint — under the *current* carbon
 intensities and runtime variance, which is exactly the paper's contribution
 (time/location-varying CI shifts the optimum).
+
+Two granularities:
+
+  * ``GreenScaleRouter`` — one environment. ``route`` decides a single
+    request; ``route_batch`` vmaps the same scalar core over a stacked
+    request batch in ONE jitted call (no Python loop).
+  * ``FleetRouter``      — many regions, each with its own hourly CI trace
+    (CASPER/CarbonEdge-style aggregate routing): a request stream tagged
+    with (region, arrival time) is routed against per-request CI rows
+    gathered from a (region, hour) table, and the result aggregates
+    per-region/per-tier assignment counts plus gCO2 saved vs. the latency-
+    and energy-optimal baselines.
 """
 
 from __future__ import annotations
@@ -20,9 +32,16 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import carbon_model
-from repro.core.carbon_model import Environment
+from repro.core.carbon_intensity import (
+    ChargingBehavior,
+    Grid,
+    grid_trace,
+    mobile_carbon_intensity,
+)
+from repro.core.carbon_model import Environment, RouteOutputs
+from repro.core.constants import N_TARGETS
 from repro.core.infrastructure import Fleet, pack_infra, tpu_fleet
-from repro.core.workloads import Workload
+from repro.core.workloads import Workload, batch_workloads
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +65,56 @@ class RouteDecision:
     per_target_carbon: tuple[float, float, float]
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestBatch:
+    """Columnar request batch: (N,) float64 columns + (N, 3) availability.
+
+    The columnar form is what lets a million requests become ONE stacked
+    Workload pytree (``batch_workloads``) instead of a million Python
+    objects; ``from_requests`` converts the object form when convenience
+    beats throughput.
+    """
+
+    prompt_tokens: np.ndarray
+    max_new_tokens: np.ndarray
+    latency_budget_s: np.ndarray
+    bytes_per_token: np.ndarray
+    available: np.ndarray  # (N, 3) bool
+
+    def __len__(self) -> int:
+        return len(self.prompt_tokens)
+
+    @classmethod
+    def from_requests(cls, reqs: list[Request]) -> "RequestBatch":
+        n = len(reqs)
+        col = lambda attr: np.fromiter(
+            (getattr(r, attr) for r in reqs), np.float64, n)
+        return cls(
+            prompt_tokens=col("prompt_tokens"),
+            max_new_tokens=col("max_new_tokens"),
+            latency_budget_s=col("latency_budget_s"),
+            bytes_per_token=col("bytes_per_token"),
+            available=np.array([r.available for r in reqs], bool),
+        )
+
+    def workload(self, cfg: ModelConfig) -> Workload:
+        """Stacked GreenScale descriptors — elementwise identical to
+        ``request_workload`` on each row (the parity tests pin this)."""
+        n_active = cfg.active_param_count()
+        total_tokens = self.prompt_tokens + self.max_new_tokens
+        return batch_workloads(
+            flops=2.0 * n_active * total_tokens,
+            mem_bytes=2.0 * n_active * np.maximum(self.max_new_tokens, 1),
+            data_in=self.bytes_per_token * self.prompt_tokens,
+            data_out=self.bytes_per_token * self.max_new_tokens,
+            latency_req=self.latency_budget_s,
+        )
+
+    @property
+    def avail(self) -> jax.Array:
+        return jnp.asarray(self.available)
+
+
 def request_workload(cfg: ModelConfig, req: Request) -> Workload:
     """GreenScale descriptor for one LM request.
 
@@ -64,9 +133,26 @@ def request_workload(cfg: ModelConfig, req: Request) -> Workload:
     )
 
 
+def _decisions_from_outputs(out: RouteOutputs) -> list[RouteDecision]:
+    """Unpack batched RouteOutputs into per-request RouteDecision objects."""
+    target = np.asarray(out.target)
+    cf = np.asarray(out.total_cf)
+    lat = np.asarray(out.latency)
+    ok = np.asarray(out.ok)
+    idx = np.arange(len(target))
+    carbon = cf[idx, target]
+    latency = lat[idx, target]
+    feas = ok[idx, target]
+    return [
+        RouteDecision(target=int(t), carbon_g=float(c), latency_s=float(l),
+                      feasible=bool(f), per_target_carbon=tuple(map(float, row)))
+        for t, c, l, f, row in zip(target, carbon, latency, feas, cf)
+    ]
+
+
 @dataclasses.dataclass
 class GreenScaleRouter:
-    """Carbon-aware tier selection for a serving fleet."""
+    """Carbon-aware tier selection for a serving fleet (one environment)."""
 
     cfg: ModelConfig
     fleet: Fleet = dataclasses.field(default_factory=tpu_fleet)
@@ -74,30 +160,178 @@ class GreenScaleRouter:
 
     def __post_init__(self):
         self._infra = pack_infra(self.fleet, self.embodied_model)
+        infra = self._infra
 
         @jax.jit
-        def _route(w: Workload, env: Environment, avail: jax.Array):
-            b = carbon_model.evaluate(w, self._infra, env)
-            ok = carbon_model.feasible(b, w) & avail
-            target = carbon_model.pick_target(b.total_cf, ok, b.total_cf,
-                                              avail)
-            return target, b.total_cf, b.latency, ok
+        def _route_one(w: Workload, env: Environment, avail: jax.Array):
+            return carbon_model.route_one(w, infra, env, avail)
 
-        self._route_fn = _route
+        @jax.jit
+        def _route_many(w: Workload, env: Environment, avail: jax.Array):
+            return carbon_model.route_many(w, infra, env, avail)
+
+        self._route_one = _route_one
+        self._route_many = _route_many
 
     def route(self, req: Request, env: Environment) -> RouteDecision:
         w = request_workload(self.cfg, req)
-        avail = jnp.asarray(req.available)
-        target, cf, lat, ok = self._route_fn(w, env, avail)
-        t = int(target)
+        out = self._route_one(w, env, jnp.asarray(req.available))
+        t = int(out.target)
         return RouteDecision(
             target=t,
-            carbon_g=float(cf[t]),
-            latency_s=float(lat[t]),
-            feasible=bool(ok[t]),
-            per_target_carbon=tuple(float(x) for x in np.asarray(cf)),
+            carbon_g=float(out.total_cf[t]),
+            latency_s=float(out.latency[t]),
+            feasible=bool(out.ok[t]),
+            per_target_carbon=tuple(float(x) for x in np.asarray(out.total_cf)),
         )
 
     def route_batch(self, reqs: list[Request], env: Environment
                     ) -> list[RouteDecision]:
-        return [self.route(r, env) for r in reqs]
+        """All requests in one jitted vmap (no per-request Python loop)."""
+        out = self.route_batch_arrays(RequestBatch.from_requests(reqs), env)
+        return _decisions_from_outputs(out)
+
+    def route_batch_arrays(self, batch: RequestBatch, env: Environment
+                           ) -> RouteOutputs:
+        """Array-in/array-out batched routing — the fleet-scale hot path."""
+        return self._route_many(batch.workload(self.cfg), env, batch.avail)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-level routing: many regions, hourly CI traces, aggregate savings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One serving region: its grid trace drives edge + hyperscale CI.
+
+    ``charging`` sets the device-battery CI of the region's users (paper
+    §3.2/Fig 4); ``core_ci`` defaults to the trace's daily mean (the core
+    path crosses many grids, so it sees an averaged intensity).
+    """
+
+    name: str
+    grid: Grid
+    charging: ChargingBehavior = ChargingBehavior.AVERAGE
+    core_ci: float | None = None
+
+
+DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
+    RegionSpec("ciso", Grid.CISO),
+    RegionSpec("nyiso", Grid.NYISO),
+    RegionSpec("urban", Grid.URBAN),
+    RegionSpec("rural", Grid.RURAL),
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetRouteResult:
+    """Aggregate result of routing a request stream across the fleet."""
+
+    target: jax.Array  # (N,) int32 chosen tier per request
+    carbon_g: jax.Array  # (N,) gCO2 of the chosen tier
+    feasible: jax.Array  # (N,) bool — chosen tier meets the QoS constraint
+    counts: jax.Array  # (R, 3) int32 assignments per (region, tier)
+    total_carbon_g: jax.Array  # () sum of carbon_g
+    latency_opt_carbon_g: jax.Array  # () same stream, latency-optimal picks
+    energy_opt_carbon_g: jax.Array  # () same stream, energy-optimal picks
+
+    @property
+    def saved_vs_latency_g(self) -> jax.Array:
+        return self.latency_opt_carbon_g - self.total_carbon_g
+
+    @property
+    def saved_vs_energy_g(self) -> jax.Array:
+        return self.energy_opt_carbon_g - self.total_carbon_g
+
+
+@dataclasses.dataclass
+class FleetRouter:
+    """Route a (region, time)-tagged request stream against regional grids.
+
+    Per region, a (24, 5) carbon-intensity table is prebuilt from its
+    ``GridTrace``: device CI from the charging behaviour (a battery buffers
+    the grid, so it is flat across the day), edge network/DC CI from the
+    hourly trace, core CI from the trace mean, hyperscale CI from the hourly
+    trace. Routing gathers each request's CI row by (region, hour-of-day) —
+    the trace "plays" as the stream's timestamps advance — and vmaps the
+    scalar Table-1 core once over the whole stream.
+    """
+
+    cfg: ModelConfig
+    fleet: Fleet = dataclasses.field(default_factory=tpu_fleet)
+    embodied_model: str = "act"
+    regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS
+    interference: tuple[float, float, float] = (1.0, 1.0, 1.0)
+    net_slowdown: tuple[float, float] = (1.0, 1.0)
+
+    def __post_init__(self):
+        self._infra = pack_infra(self.fleet, self.embodied_model)
+        self._interference = jnp.asarray(self.interference, jnp.float32)
+        self._net_slowdown = jnp.asarray(self.net_slowdown, jnp.float32)
+
+        rows = []
+        for region in self.regions:
+            trace = grid_trace(region.grid)
+            ci_mob = jnp.full((24,), mobile_carbon_intensity(
+                region.charging, trace), jnp.float32)
+            ci_hour = trace.ci_hourly.astype(jnp.float32)
+            core = region.core_ci if region.core_ci is not None else \
+                trace.ci_mean
+            ci_core = jnp.full((24,), core, jnp.float32)
+            # Component order [mobile, edge_net, edge_dc, core_net, hyper_dc];
+            # edge network and edge DC share CI_E (Environment.make).
+            rows.append(jnp.stack(
+                [ci_mob, ci_hour, ci_hour, ci_core, ci_hour], axis=-1))
+        self._ci_table = jnp.stack(rows)  # (R, 24, 5)
+
+        infra = self._infra
+        n_regions = len(self.regions)
+        interference = self._interference
+        net_slowdown = self._net_slowdown
+
+        @jax.jit
+        def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
+                         hour: jax.Array, ci_table: jax.Array
+                         ) -> FleetRouteResult:
+            env = Environment(ci=ci_table[region, hour],  # (N, 5)
+                              interference=interference,
+                              net_slowdown=net_slowdown)
+            out = carbon_model.route_many_envs(w, infra, env, avail)
+            take = lambda t: jnp.take_along_axis(
+                out.total_cf, t[:, None], axis=1)[:, 0]
+            carbon = take(out.target)
+            counts = jnp.zeros((n_regions, N_TARGETS), jnp.int32).at[
+                region].add(jax.nn.one_hot(out.target, N_TARGETS,
+                                           dtype=jnp.int32))
+            return FleetRouteResult(
+                target=out.target,
+                carbon_g=carbon,
+                feasible=jnp.take_along_axis(
+                    out.ok, out.target[:, None], axis=1)[:, 0],
+                counts=counts,
+                total_carbon_g=carbon.sum(),
+                latency_opt_carbon_g=take(out.target_latency).sum(),
+                energy_opt_carbon_g=take(out.target_energy).sum(),
+            )
+
+        self._fleet_route = _fleet_route
+
+    def env_at(self, region: int, hour: int) -> Environment:
+        """The exact Environment a request in ``region`` at ``hour`` sees
+        (the scalar-parity hook: GreenScaleRouter.route against this env
+        must reproduce the fleet decision)."""
+        return Environment(ci=self._ci_table[region, hour % 24],
+                           interference=self._interference,
+                           net_slowdown=self._net_slowdown)
+
+    def route_stream(self, batch: RequestBatch, region: np.ndarray,
+                     t_hours: np.ndarray) -> FleetRouteResult:
+        """Route a request stream. ``region`` (N,) int region indices,
+        ``t_hours`` (N,) arrival times in hours (wrapped modulo 24)."""
+        region = jnp.asarray(region, jnp.int32)
+        hour = jnp.asarray(np.floor(np.asarray(t_hours)) % 24, jnp.int32)
+        return self._fleet_route(batch.workload(self.cfg), batch.avail,
+                                 region, hour, self._ci_table)

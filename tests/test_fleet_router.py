@@ -1,0 +1,190 @@
+"""Batched + fleet router tests: parity with the scalar route, infeasible
+fallback, aggregate invariants, engine admission."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.carbon_model import Environment
+from repro.core.constants import Target
+from repro.serve import (
+    FleetRouter,
+    GreenScaleRouter,
+    RegionSpec,
+    Request,
+    RequestBatch,
+)
+from repro.serve.engine import ServeEngine
+from repro.core.carbon_intensity import Grid
+
+ARCH = "h2o-danube-1.8b"
+
+
+def _random_requests(n: int, seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        avail = tuple(bool(x) for x in (rng.random(3) < 0.8))
+        if not any(avail):
+            avail = (True, True, True)
+        reqs.append(Request(
+            prompt_tokens=int(rng.integers(16, 8192)),
+            max_new_tokens=int(rng.integers(8, 512)),
+            latency_budget_s=float(rng.choice([0.3, 2.0, 10.0, 60.0])),
+            available=avail))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def router():
+    return GreenScaleRouter(get_config(ARCH))
+
+
+@pytest.fixture(scope="module")
+def fleet_router():
+    return FleetRouter(get_config(ARCH))
+
+
+class TestBatchedParity:
+    def test_route_batch_matches_scalar_route(self, router):
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        reqs = _random_requests(48)
+        batched = router.route_batch(reqs, env)
+        for i, (b, s) in enumerate(zip(batched,
+                                       (router.route(r, env) for r in reqs))):
+            assert b.target == s.target, i
+            assert b.feasible == s.feasible, i
+            # vmap and scalar jit fuse differently -> last-bit float drift
+            np.testing.assert_allclose(b.per_target_carbon,
+                                       s.per_target_carbon, rtol=1e-5)
+            np.testing.assert_allclose(b.carbon_g, s.carbon_g, rtol=1e-5)
+            np.testing.assert_allclose(b.latency_s, s.latency_s, rtol=1e-5)
+
+    def test_columnar_batch_equals_object_batch(self, router):
+        env = Environment.make(100.0, 600.0, 280.0, 50.0)
+        reqs = _random_requests(16, seed=3)
+        via_objects = router.route_batch(reqs, env)
+        out = router.route_batch_arrays(RequestBatch.from_requests(reqs), env)
+        np.testing.assert_array_equal(
+            np.asarray(out.target), [d.target for d in via_objects])
+
+    def test_stacked_workloads_through_route_many(self, router):
+        """The core batched entry points compose: stack_workloads over
+        per-request descriptors + route_many == RequestBatch hot path."""
+        import jax.numpy as jnp
+
+        from repro.core import carbon_model
+        from repro.core.workloads import stack_workloads
+        from repro.serve.router import request_workload
+
+        env = Environment.make(250.0, 400.0, 280.0, 100.0)
+        reqs = _random_requests(12, seed=21)
+        stacked = stack_workloads(
+            [request_workload(router.cfg, r) for r in reqs])
+        avail = jnp.asarray([r.available for r in reqs])
+        out = carbon_model.route_many(stacked, router._infra, env, avail)
+        fast = router.route_batch_arrays(RequestBatch.from_requests(reqs),
+                                         env)
+        np.testing.assert_array_equal(np.asarray(out.target),
+                                      np.asarray(fast.target))
+        np.testing.assert_allclose(np.asarray(out.total_cf),
+                                   np.asarray(fast.total_cf), rtol=1e-5)
+
+
+class TestFleetParity:
+    def test_fleet_decisions_match_scalar_route_per_env(self, router,
+                                                        fleet_router):
+        """Batched FleetRouter == per-request GreenScaleRouter.route on the
+        same env: target, carbon_g, feasible (ISSUE parity criterion)."""
+        rng = np.random.default_rng(7)
+        reqs = _random_requests(32, seed=7)
+        region = rng.integers(0, len(fleet_router.regions), len(reqs))
+        t_hours = rng.uniform(0.0, 48.0, len(reqs))
+        res = fleet_router.route_stream(RequestBatch.from_requests(reqs),
+                                        region, t_hours)
+        for i, req in enumerate(reqs):
+            env = fleet_router.env_at(int(region[i]),
+                                      int(np.floor(t_hours[i])) % 24)
+            d = router.route(req, env)
+            assert d.target == int(res.target[i]), i
+            assert d.feasible == bool(res.feasible[i]), i
+            np.testing.assert_allclose(d.carbon_g, float(res.carbon_g[i]),
+                                       rtol=1e-5)
+
+    def test_counts_partition_the_stream(self, fleet_router):
+        rng = np.random.default_rng(11)
+        n = 257
+        batch = RequestBatch.from_requests(_random_requests(n, seed=11))
+        region = rng.integers(0, len(fleet_router.regions), n)
+        res = fleet_router.route_stream(batch, region, rng.uniform(0, 24, n))
+        counts = np.asarray(res.counts)
+        assert counts.sum() == n
+        for ri in range(len(fleet_router.regions)):
+            assert counts[ri].sum() == int((region == ri).sum())
+
+    def test_carbon_optimal_never_beaten_by_baselines(self, fleet_router):
+        """The carbon pick minimizes carbon over the same feasibility set the
+        latency/energy baselines choose from, so savings are >= 0."""
+        rng = np.random.default_rng(13)
+        n = 128
+        batch = RequestBatch.from_requests(_random_requests(n, seed=13))
+        region = rng.integers(0, len(fleet_router.regions), n)
+        res = fleet_router.route_stream(batch, region, rng.uniform(0, 24, n))
+        assert float(res.saved_vs_latency_g) >= -1e-6
+        assert float(res.saved_vs_energy_g) >= -1e-6
+
+    def test_hour_advances_the_trace(self):
+        """A solar-dominated grid must route differently at midday than at
+        midnight for a DC-eligible workload (the trace actually plays)."""
+        fr = FleetRouter(get_config(ARCH),
+                         regions=(RegionSpec("ciso", Grid.CISO),))
+        noon = np.asarray(fr.env_at(0, 13).ci)
+        midnight = np.asarray(fr.env_at(0, 1).ci)
+        assert noon[4] < midnight[4]  # hyperscale CI dips with the sun
+
+
+class TestInfeasibleFallback:
+    def test_falls_back_to_lowest_carbon_available_tier(self, router):
+        """Property: with an impossible latency budget nothing is feasible,
+        so every decision must be the min-carbon tier among available ones
+        (paper Fig 10(c) behaviour)."""
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        masks = [(True, True, True), (False, True, True), (True, False, True),
+                 (True, True, False), (False, False, True),
+                 (True, False, False)]
+        rng = np.random.default_rng(5)
+        for mask in masks:
+            for _ in range(4):
+                req = Request(prompt_tokens=int(rng.integers(64, 4096)),
+                              max_new_tokens=int(rng.integers(8, 256)),
+                              latency_budget_s=1e-9, available=mask)
+                d = router.route(req, env)
+                assert not d.feasible
+                cf = np.where(mask, d.per_target_carbon, np.inf)
+                assert d.target == int(np.argmin(cf))
+
+    def test_batched_fallback_matches(self, router):
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        reqs = [Request(prompt_tokens=512, max_new_tokens=64,
+                        latency_budget_s=1e-9, available=m)
+                for m in [(True, True, True), (False, True, True),
+                          (True, False, False)]]
+        for d in router.route_batch(reqs, env):
+            assert not d.feasible
+        targets = [d.target for d in router.route_batch(reqs, env)]
+        assert targets == [router.route(r, env).target for r in reqs]
+
+
+class TestAdmission:
+    def test_admit_mask_and_indices(self):
+        eng = ServeEngine.__new__(ServeEngine)  # no params needed for admit
+        eng.tier = int(Target.EDGE_DC)
+        targets = np.array([0, 1, 2, 1, 1, 0])
+        mask = np.asarray(eng.admit(targets))
+        np.testing.assert_array_equal(mask, targets == 1)
+        np.testing.assert_array_equal(eng.admit_indices(targets), [1, 3, 4])
+
+    def test_untiered_engine_admits_everything(self):
+        eng = ServeEngine.__new__(ServeEngine)
+        eng.tier = None
+        assert bool(np.asarray(eng.admit(np.array([0, 1, 2]))).all())

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Reproducible tier-1 verify: install declared deps (best effort — the CI
+# container may be offline; conftest.py degrades gracefully when hypothesis
+# is absent) and run the suite. Slow tests (the dryrun subprocess smoke) are
+# deselected by pyproject.toml addopts; include them with: tools/run_tests.sh -m slow
+set -u
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements.txt --quiet 2>/dev/null \
+    || echo "pip install failed (offline?) — running with what's available"
+
+exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
