@@ -1,0 +1,106 @@
+"""Policy-layer throughput + carbon head-to-head on the diurnal fleet stream.
+
+Routes the same 1M-request diurnal trace (the `examples/serving_router.py`
+stream) under every kind of ``RoutingPolicy`` — Table-1 oracle (carbon +
+latency/energy baseline variants), fitted learned schedulers (regression /
+classification inference in pure JAX), and the capacity-capped oracle — and
+reports each policy's req/s, total gCO2, carbon saved vs. the latency-optimal
+baseline, and QoS/shed rates. This pins the policy layer's overhead vs. the
+bare ``route_many_envs`` hot path in numbers.
+
+Run:  PYTHONPATH=src python -m benchmarks.policy_throughput [--n 1000000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.configs import get_config
+from repro.core import build_scenarios, explore, paper_fleet
+from repro.core.design_space import ScenarioAxes
+from repro.core.schedulers import (
+    ClassificationScheduler,
+    RegressionScheduler,
+    build_dataset,
+)
+from repro.core.workloads import ALL_PAPER_WORKLOADS
+from repro.serve import (
+    CapacityLimiter,
+    FleetRouter,
+    LearnedPolicy,
+    OraclePolicy,
+)
+from repro.serve.streams import diurnal_stream
+
+ARCH = "h2o-danube-1.8b"
+
+
+def fit_dataset():
+    """Small offline design-space dataset for the learned policies."""
+    axes = ScenarioAxes(hours=tuple(range(0, 24, 4)))
+    table = build_scenarios(paper_fleet(), axes)
+    res = explore(ALL_PAPER_WORKLOADS, table)
+    return build_dataset(ALL_PAPER_WORKLOADS, res, table).split()[0]
+
+
+def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
+    cfg = get_config(ARCH)
+    base = FleetRouter(cfg)
+    infra = base.infra
+    n_regions = len(base.regions)
+    batch, region, t_hours = diurnal_stream(n, n_regions)
+
+    train = fit_dataset()
+    caps = np.full((n_regions, 3), np.inf)
+    caps[:, 1] = max(1.0, 0.5 * n / (n_regions * 24))  # bind the edge tier
+
+    policies = [
+        ("oracle_carbon", None),  # FleetRouter default — the reference
+        ("oracle_latency", OraclePolicy(infra, metric="latency")),
+        ("oracle_energy", OraclePolicy(infra, metric="energy")),
+        ("learned_regression", LearnedPolicy.fit(RegressionScheduler(),
+                                                 train)),
+        ("learned_classification", LearnedPolicy.fit(
+            ClassificationScheduler(), train)),
+        ("capped_oracle", CapacityLimiter(OraclePolicy(infra), caps)),
+    ]
+
+    rows = []
+    baseline_g = None
+    for name, policy in policies:
+        fr = base if policy is None else FleetRouter(cfg, policy=policy)
+        res = fr.route_stream(batch, region, t_hours)  # compile + warm
+        jax.block_until_ready(res.target)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            res = fr.route_stream(batch, region, t_hours)
+        jax.block_until_ready(res.target)
+        us = (time.perf_counter() - t0) / reps / n * 1e6
+        if baseline_g is None:
+            baseline_g = float(res.latency_opt_carbon_g)
+        rows.append(BenchRow(
+            f"policy_{name}", us,
+            f"req/s={1e6 / us:.0f} carbon_g={float(res.total_carbon_g):.4g} "
+            f"saved_vs_latency_g={baseline_g - float(res.total_carbon_g):.4g} "
+            f"qos_rate={float(res.qos_violation_rate):.4f} "
+            f"shed={int(res.shed_count)}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(args.n, args.reps):
+        print(row.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -20,12 +20,21 @@ def main() -> None:
                     help="dry-run JSON for the roofline table")
     args = ap.parse_args()
 
-    from benchmarks import lm_design_space, roofline, router_throughput
+    from benchmarks import (
+        lm_design_space,
+        policy_throughput,
+        roofline,
+        router_throughput,
+    )
     from benchmarks.paper_figures import ALL_FIGS
 
     groups = [(fig.__name__, fig) for fig in ALL_FIGS]
     groups.append(("lm_design_space", lm_design_space.run))
     groups.append(("router_throughput", router_throughput.run))
+    # smaller stream than the standalone default keeps the full driver quick;
+    # run `python -m benchmarks.policy_throughput` for the 1M-request numbers
+    groups.append(("policy_throughput",
+                   lambda: policy_throughput.run(n=200_000)))
     if args.artifact:
         groups.append(("roofline", lambda: roofline.run(args.artifact)))
     else:

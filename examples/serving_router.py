@@ -1,6 +1,6 @@
 """Serving with the GreenScale router: from one request to a 1M-request fleet.
 
-Three acts:
+Four acts:
 
   1. The paper's Fig-5/9 behaviour live on an LM serving stack: the router
      moves request classes between device / edge / cloud tiers as the grid's
@@ -10,7 +10,12 @@ Three acts:
      one batched call — per-region/per-tier assignment counts and aggregate
      gCO2 saved vs. the latency- and energy-optimal baselines.
   3. Admission: a tier-pinned engine admits its slice of the routed batch
-     and actually serves it.
+     window by window (FleetRouter.admit_windows) and actually serves it.
+  4. Policies head-to-head: the same stream under pluggable RoutingPolicy
+     decision-makers — carbon oracle vs. latency/energy baselines vs. the
+     capacity-capped oracle (per-(region, tier) caps with spill). Add
+     --learned to also fit a regression scheduler offline and route the
+     stream with its pure-JAX inference.
 
 Run:  PYTHONPATH=src python examples/serving_router.py [--requests 1000000]
 """
@@ -29,43 +34,18 @@ from repro.core.carbon_model import Environment
 from repro.core.constants import Target
 from repro.models import init_params
 from repro.serve import (
+    CapacityLimiter,
     FleetRouter,
     GreenScaleRouter,
+    LearnedPolicy,
+    OraclePolicy,
     Request,
-    RequestBatch,
     ServeEngine,
 )
 
+from repro.serve.streams import diurnal_stream
+
 TARGETS = ("on-device", "edge-DC", "cloud")
-
-
-def diurnal_hours(rng: np.random.Generator, n: int) -> np.ndarray:
-    """Arrival times (hours): sinusoidal daily load peaking at 20:00."""
-    hours = np.arange(24)
-    rate = 1.0 + 0.8 * np.cos((hours - 20.0) / 24.0 * 2 * np.pi)
-    p = rate / rate.sum()
-    return rng.choice(24, n, p=p) + rng.uniform(0.0, 1.0, n)
-
-
-def synthetic_stream(rng: np.random.Generator, n: int) -> RequestBatch:
-    """Mix of chat (short), summarize (long-prefill), and agent (long-decode)
-    request classes; prompts >= 2048 tokens never fit on-device."""
-    cls = rng.choice(3, n, p=[0.7, 0.2, 0.1])
-    prompt = np.select(
-        [cls == 0, cls == 1, cls == 2],
-        [rng.integers(16, 512, n), rng.integers(2048, 16384, n),
-         rng.integers(256, 2048, n)]).astype(np.float64)
-    new = np.select(
-        [cls == 0, cls == 1, cls == 2],
-        [rng.integers(16, 256, n), rng.integers(32, 128, n),
-         rng.integers(256, 1024, n)]).astype(np.float64)
-    budget = np.select([cls == 0, cls == 1, cls == 2],
-                       [np.full(n, 2.0), np.full(n, 20.0), np.full(n, 30.0)])
-    avail = np.ones((n, 3), bool)
-    avail[:, 0] = prompt < 2048
-    return RequestBatch(prompt_tokens=prompt, max_new_tokens=new,
-                        latency_budget_s=budget,
-                        bytes_per_token=np.full(n, 4.0), available=avail)
 
 
 def main() -> None:
@@ -73,6 +53,9 @@ def main() -> None:
     ap.add_argument("--arch", default="h2o-danube-1.8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=1_000_000)
+    ap.add_argument("--learned", action="store_true",
+                    help="also fit a regression scheduler offline and route "
+                         "the stream with its jitted inference (act 4)")
     args = ap.parse_args()
     if args.requests < 1:
         ap.error("--requests must be >= 1")
@@ -113,11 +96,8 @@ def main() -> None:
 
     # --- act 2: 1M-request synthetic diurnal trace across the fleet ---------
     fleet = FleetRouter(full)
-    rng = np.random.default_rng(0)
     n = args.requests
-    batch = synthetic_stream(rng, n)
-    region = rng.integers(0, len(fleet.regions), n)
-    t_hours = diurnal_hours(rng, n)
+    batch, region, t_hours = diurnal_stream(n, len(fleet.regions), seed=0)
 
     res = fleet.route_stream(batch, region, t_hours)  # compile + route
     jax.block_until_ready(res.target)
@@ -136,14 +116,56 @@ def main() -> None:
           f"saves {float(res.saved_vs_latency_g):.4g} g vs latency-optimal, "
           f"{float(res.saved_vs_energy_g):.4g} g vs energy-optimal")
 
-    # --- act 3: tier-pinned engine admits its slice and serves a sample -----
+    # --- act 3: tier-pinned engine admits its slice, window by window -------
     admitted = engine.admit_indices(res.target)
+    windows = fleet.admit_windows(res, t_hours, engine)
+    peak = max(range(24), key=lambda h: len(windows[h]))
     print(f"\nedge-DC engine admits {len(admitted):,}/{n:,} requests "
-          f"({len(admitted) / n:.1%})")
+          f"({len(admitted) / n:.1%}); busiest window {peak}:00 with "
+          f"{len(windows[peak]):,} requests")
     toks = jax.random.randint(key, (args.batch, 16), 0, smoke.vocab_size)
     out = engine.generate(toks, max_new_tokens=8)
     print(f"engine generated {out.shape[1]} tokens for a batch of "
           f"{out.shape[0]} admitted requests: {out[0].tolist()}")
+
+    # --- act 4: pluggable policies head-to-head on the same stream ----------
+    infra = fleet.infra
+    caps = np.full((len(fleet.regions), 3), np.inf)
+    caps[:, 2] = 0.8 * n / (len(fleet.regions) * 24)  # bind the cloud tier
+    policies = [
+        ("oracle-carbon", None),
+        ("oracle-latency", OraclePolicy(infra, metric="latency")),
+        ("oracle-energy", OraclePolicy(infra, metric="energy")),
+        ("capped-oracle", CapacityLimiter(OraclePolicy(infra), caps)),
+    ]
+    if args.learned:
+        from repro.core import build_scenarios, explore, paper_fleet
+        from repro.core.design_space import ScenarioAxes
+        from repro.core.schedulers import RegressionScheduler, build_dataset
+        from repro.core.workloads import ALL_PAPER_WORKLOADS
+
+        table = build_scenarios(
+            paper_fleet(), ScenarioAxes(hours=tuple(range(0, 24, 4))))
+        ds = build_dataset(ALL_PAPER_WORKLOADS,
+                           explore(ALL_PAPER_WORKLOADS, table), table)
+        policies.append(("learned-regression",
+                         LearnedPolicy.fit(RegressionScheduler(),
+                                           ds.split()[0])))
+
+    print(f"\npolicy head-to-head on the same {n:,}-request stream:")
+    for name, policy in policies:
+        fr = fleet if policy is None else FleetRouter(full, policy=policy)
+        r = fr.route_stream(batch, region, t_hours)
+        jax.block_until_ready(r.target)
+        t0 = time.perf_counter()
+        r = fr.route_stream(batch, region, t_hours)
+        jax.block_until_ready(r.target)
+        dt = time.perf_counter() - t0
+        print(f"  {name:20s}: {n / dt / 1e6:5.2f}M req/s  "
+              f"carbon {float(r.total_carbon_g):9.4g} g  "
+              f"(+{float(r.extra_vs_oracle_g):.3g} vs oracle)  "
+              f"qos {float(r.qos_violation_rate):.2%}  "
+              f"shed {int(r.shed_count):,}")
 
 
 if __name__ == "__main__":

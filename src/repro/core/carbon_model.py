@@ -228,6 +228,12 @@ def pick_target(score: jax.Array, ok: jax.Array, fallback: jax.Array,
     reports an optimum (e.g. Fig 10(c): every target misses under unstable
     networks, Mobile is picked on carbon) — fall back to argmin(fallback)
     over available targets.
+
+    Degenerate all-False ``avail`` (the request can run nowhere) resolves to
+    ``Target.MOBILE`` (index 0): every masked score is +inf and
+    ``jnp.argmin`` over a constant array returns the first index. This is
+    pinned behaviour (tests/test_carbon_model.py) — the request falls back to
+    the user's own device, the only tier that always physically exists.
     """
     if avail is None:
         avail = jnp.ones_like(ok)

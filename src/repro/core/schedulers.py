@@ -38,7 +38,13 @@ from repro.core.design_space import DesignSpaceResult
 
 @dataclasses.dataclass
 class SchedulerDataset:
-    """Flattened (workload x scenario) decision problems."""
+    """Flattened (workload x scenario) decision problems.
+
+    ``feat_mean``/``feat_std`` are the standardization statistics applied to
+    ``features`` — a fitted model can only route a *live* stream (see
+    repro.serve.policy.LearnedPolicy) if fresh feature rows are standardized
+    with the same statistics, so they travel with the dataset.
+    """
 
     features: np.ndarray  # (N, F) standardized
     labels: np.ndarray  # (N,) oracle carbon-optimal target
@@ -46,6 +52,8 @@ class SchedulerDataset:
     energy: np.ndarray  # (N, 3)
     latency: np.ndarray  # (N, 3)
     feasible: np.ndarray  # (N, 3)
+    feat_mean: np.ndarray | None = None  # (F,)
+    feat_std: np.ndarray | None = None  # (F,) clamped away from zero
 
     def split(self, test_frac: float = 0.25, seed: int = 0):
         rng = np.random.default_rng(seed)
@@ -55,7 +63,8 @@ class SchedulerDataset:
         tr, te = perm[:k], perm[k:]
         pick = lambda idx: SchedulerDataset(
             self.features[idx], self.labels[idx], self.total_cf[idx],
-            self.energy[idx], self.latency[idx], self.feasible[idx])
+            self.energy[idx], self.latency[idx], self.feasible[idx],
+            self.feat_mean, self.feat_std)
         return pick(tr), pick(te)
 
 
@@ -89,7 +98,8 @@ def build_dataset(infos, result: DesignSpaceResult,
         feats.append(np.concatenate(
             [np.tile(f_w, (n_s, 1)), f_s], axis=1))
     X = np.concatenate(feats, axis=0)
-    X = (X - X.mean(0)) / np.maximum(X.std(0), 1e-9)
+    mean, std = X.mean(0), np.maximum(X.std(0), 1e-9)
+    X = (X - mean) / std
 
     flat = lambda a: a.reshape(n_w * n_s, *a.shape[2:])
     return SchedulerDataset(
@@ -99,6 +109,8 @@ def build_dataset(infos, result: DesignSpaceResult,
         energy=flat(result.energy_j),
         latency=flat(result.latency),
         feasible=flat(result.feasible),
+        feat_mean=mean.astype(np.float32),
+        feat_std=std.astype(np.float32),
     )
 
 
@@ -112,6 +124,17 @@ class FitResult:
     predict_targets: np.ndarray  # (N_test,)
     train_flops: float
     flops_per_decision: float
+
+
+def _with_bias(X: jax.Array) -> jax.Array:
+    return jnp.concatenate([X, jnp.ones((X.shape[0], 1), X.dtype)], axis=1)
+
+
+# Every learned scheduler splits into an offline ``fit_params(train)`` (numpy
+# or host-loop heavy lifting, unchanged math) and a pure-JAX
+# ``jax_scores(params, X) -> (N, 3)`` (lower is better) that
+# repro.serve.policy.LearnedPolicy jits into the fleet routing hot path.
+# ``fit_predict`` composes the two, preserving the Fig-14 offline protocol.
 
 
 class OracleScheduler:
@@ -133,22 +156,27 @@ class RegressionScheduler:
     def __init__(self, ridge: float = 1e-3):
         self.ridge = ridge
 
-    def fit_predict(self, train, test) -> FitResult:
+    def fit_params(self, train: SchedulerDataset) -> dict:
         X = jnp.asarray(train.features)
-        Xb = jnp.concatenate([X, jnp.ones((len(X), 1))], 1)
+        Xb = _with_bias(X)
         d = Xb.shape[1]
         gram = Xb.T @ Xb + self.ridge * jnp.eye(d)
         W_cf = jnp.linalg.solve(gram, Xb.T @ jnp.log(
             jnp.asarray(train.total_cf) + 1e-9))
         W_lat = jnp.linalg.solve(gram, Xb.T @ jnp.log(
             jnp.asarray(train.latency) + 1e-9))
+        return {"W_cf": W_cf, "W_lat": W_lat}
 
-        Xt = jnp.concatenate([jnp.asarray(test.features),
-                              jnp.ones((len(test.features), 1))], 1)
-        cf_hat = Xt @ W_cf
+    @staticmethod
+    def jax_scores(params: dict, X: jax.Array) -> jax.Array:
         # feasibility from *known* per-target latency requirement is implicit
         # in the label; regression approximates it via predicted latency rank
-        score = cf_hat + 10.0 * (Xt @ W_lat > 0.0)  # soft penalty
+        Xb = _with_bias(X)
+        return Xb @ params["W_cf"] + 10.0 * (Xb @ params["W_lat"] > 0.0)
+
+    def fit_predict(self, train, test) -> FitResult:
+        params = self.fit_params(train)
+        score = self.jax_scores(params, jnp.asarray(test.features))
         pred = np.asarray(jnp.argmin(score, axis=1))
         n, f = train.features.shape
         train_flops = 2 * n * f * f + f ** 3
@@ -169,17 +197,24 @@ class ClassificationScheduler:
     def __init__(self, ridge: float = 1e-2):
         self.ridge = ridge
 
-    def fit_predict(self, train, test) -> FitResult:
+    def fit_params(self, train: SchedulerDataset) -> dict:
         X = jnp.asarray(train.features)
-        Xb = jnp.concatenate([X, jnp.ones((len(X), 1))], 1)
+        Xb = _with_bias(X)
         # LS-SVM targets: +1 for the class, -1 otherwise
         Y = 2.0 * jax.nn.one_hot(jnp.asarray(train.labels), 3) - 1.0
         d = Xb.shape[1]
         W = jnp.linalg.solve(Xb.T @ Xb + self.ridge * len(Xb) * jnp.eye(d),
                              Xb.T @ Y)
-        Xt = jnp.concatenate([jnp.asarray(test.features),
-                              jnp.ones((len(test.features), 1))], 1)
-        pred = np.asarray(jnp.argmax(Xt @ W, -1))
+        return {"W": W}
+
+    @staticmethod
+    def jax_scores(params: dict, X: jax.Array) -> jax.Array:
+        return -(_with_bias(X) @ params["W"])  # argmin(-logit) = argmax(logit)
+
+    def fit_predict(self, train, test) -> FitResult:
+        params = self.fit_params(train)
+        pred = np.asarray(jnp.argmin(
+            self.jax_scores(params, jnp.asarray(test.features)), -1))
         n, f = train.features.shape
         return FitResult(pred, float(2 * n * f * f + f ** 3),
                          flops_per_decision=2.0 * f * 3)
@@ -201,32 +236,49 @@ class BOScheduler:
         d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
         return jnp.exp(-0.5 * d2 / ls ** 2)
 
-    def fit_predict(self, train, test) -> FitResult:
+    def fit_params(self, train: SchedulerDataset) -> dict:
         rng = np.random.default_rng(self.seed)
         X = jnp.asarray(train.features)
         y = jnp.log(jnp.asarray(train.total_cf) + 1e-9)
         y = (y - y.mean(0)) / jnp.maximum(y.std(0), 1e-9)
 
-        # active selection: greedy max posterior variance (jitted inner alg)
+        # active selection: greedy max posterior variance over a candidate
+        # pool, strictly WITHOUT replacement — a duplicate support point adds
+        # no information and would silently shrink the GP training set, so
+        # already-chosen candidates are masked out of the acquisition.
         chosen = [int(rng.integers(len(X)))]
         cand = rng.permutation(len(X))[:4 * self.budget]
-        for _ in range(min(self.budget, len(X)) - 1):
+        for _ in range(min(self.budget, len(X), len(cand)) - 1):
             Xc = X[jnp.asarray(chosen)]
             Kcc = self._rbf(Xc, Xc, self.ls) + self.noise * jnp.eye(len(chosen))
             Kxc = self._rbf(X[cand], Xc, self.ls)
             sol = jnp.linalg.solve(Kcc, Kxc.T)
-            var = 1.0 - jnp.sum(Kxc.T * sol, axis=0)
-            nxt = int(cand[int(jnp.argmax(var))])
-            if nxt in chosen:
-                nxt = int(rng.integers(len(X)))
-            chosen.append(nxt)
+            var = np.array(1.0 - jnp.sum(Kxc.T * sol, axis=0))  # writable copy
+            var[np.isin(cand, chosen)] = -np.inf
+            chosen.append(int(cand[int(np.argmax(var))]))
 
         idx = jnp.asarray(chosen)
         Xc, yc = X[idx], y[idx]
         Kcc = self._rbf(Xc, Xc, self.ls) + self.noise * jnp.eye(len(idx))
         alpha = jnp.linalg.solve(Kcc, yc)
-        Kt = self._rbf(jnp.asarray(test.features), Xc, self.ls)
-        mean = Kt @ alpha
+        return {"support": Xc, "alpha": alpha,
+                "ls": jnp.asarray(self.ls, jnp.float32),
+                "idx": jnp.asarray(chosen, jnp.int32)}
+
+    @staticmethod
+    def jax_scores(params: dict, X: jax.Array) -> jax.Array:
+        # Dot-product form of the RBF kernel: the pairwise-difference form
+        # materializes an (N, m, F) tensor, which at fleet scale (N ~ 1e6)
+        # would be gigabytes; |a-b|^2 = |a|^2 + |b|^2 - 2ab stays (N, m).
+        S = params["support"]
+        d2 = ((X ** 2).sum(-1)[:, None] + (S ** 2).sum(-1)[None, :]
+              - 2.0 * X @ S.T)
+        K = jnp.exp(-0.5 * jnp.maximum(d2, 0.0) / params["ls"] ** 2)
+        return K @ params["alpha"]
+
+    def fit_predict(self, train, test) -> FitResult:
+        params = self.fit_params(train)
+        mean = self.jax_scores(params, jnp.asarray(test.features))
         pred = np.asarray(jnp.argmin(mean, -1))
         m, f = self.budget, train.features.shape[1]
         train_flops = self.budget * (m * m * f + m ** 3 / 3)
@@ -266,7 +318,7 @@ class RLScheduler:
         norm = base / np.maximum(base.min(axis=1, keepdims=True), 1e-12)
         return np.log1p(norm) + 3.0 * (~ds.feasible)
 
-    def fit_predict(self, train, test) -> FitResult:
+    def fit_params(self, train: SchedulerDataset) -> dict:
         rng = np.random.default_rng(self.seed)
         X = self._phi(train.features)
         cost = self._cost(train)
@@ -292,6 +344,21 @@ class RLScheduler:
                 Xa, ca = X[idx], np.asarray(seen_c[a])
                 gram = Xa.T @ Xa + self.ridge * len(idx) * np.eye(F)
                 W[:, a] = np.linalg.solve(gram, Xa.T @ ca)
+        return {"W": W}
+
+    @staticmethod
+    def jax_scores(params: dict, X: jax.Array) -> jax.Array:
+        # jnp mirror of _phi: squared CI terms + CI x workload interactions.
+        ci = X[:, 6:11]
+        wf = X[:, 0:6]
+        inter = (ci[:, :, None] * wf[:, None, :3]).reshape(X.shape[0], -1)
+        phi = jnp.concatenate(
+            [X, ci ** 2, inter, jnp.ones((X.shape[0], 1), X.dtype)], axis=1)
+        return phi @ params["W"]
+
+    def fit_predict(self, train, test) -> FitResult:
+        W = np.asarray(self.fit_params(train)["W"])
+        n, F = len(train.features), W.shape[0]  # F = phi width, no recompute
         pred = np.argmin(self._phi(test.features) @ W, axis=1)
         train_flops = self.episodes * (2 * n * F * F + F ** 3) * 3
         return FitResult(pred, float(train_flops),

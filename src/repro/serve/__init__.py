@@ -1,6 +1,14 @@
-"""Serving: batched engine + GreenScale per-request and fleet routers."""
+"""Serving: batched engine, GreenScale routers, pluggable routing policies."""
 
 from repro.serve.engine import ServeEngine
+from repro.serve.policy import (
+    CapacityLimiter,
+    CapacityState,
+    LearnedPolicy,
+    OraclePolicy,
+    RoutingPolicy,
+    policy_features,
+)
 from repro.serve.router import (
     DEFAULT_REGIONS,
     FleetRouteResult,

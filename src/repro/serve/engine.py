@@ -33,6 +33,9 @@ class ServeEngine:
     params: Any
     max_seq: int = 4096
     use_pallas: bool = False
+    #: default sampling mode: greedy engines argmax, non-greedy engines
+    #: sample at temperature 1.0. An explicit ``temperature=`` to
+    #: ``generate`` always wins over this flag.
     greedy: bool = True
     #: execution tier this engine instance serves (Target enum value); None
     #: means the engine accepts everything (single-tier deployments).
@@ -85,9 +88,17 @@ class ServeEngine:
         return logits[:, 0], state
 
     def generate(self, tokens: jax.Array, *, max_new_tokens: int,
-                 key: jax.Array | None = None, temperature: float = 0.0,
+                 key: jax.Array | None = None,
+                 temperature: float | None = None,
                  **extras) -> jax.Array:
-        """Greedy/temperature sampling. Returns (B, max_new_tokens)."""
+        """Greedy/temperature sampling. Returns (B, max_new_tokens).
+
+        ``temperature=None`` (default) defers to the engine's ``greedy``
+        flag: argmax when greedy, T=1.0 sampling otherwise (which still
+        needs ``key``; without one, sampling degrades to argmax).
+        """
+        if temperature is None:
+            temperature = 0.0 if self.greedy else 1.0
         logits, state = self.prefill_batch(tokens, **extras)
         outs = []
         tok = self._sample(logits, key, temperature, 0)

@@ -1,0 +1,348 @@
+"""Pluggable routing policies: ONE decision interface from the Table-1 oracle
+to learned schedulers to capacity-capped fleet simulation.
+
+The paper's core claim is that *how you decide* changes the carbon outcome
+(oracle Table-1 search vs. learned predictors, §5.4/Fig 14). This module is
+the seam that lets every decision-maker route the same fleet-scale stream:
+
+  * ``OraclePolicy``    — exhaustive Table-1 evaluation per request (the
+    paper's explorer), with ``metric="carbon"/"latency"/"energy"`` variants
+    so the baselines are ordinary policies instead of special cases.
+  * ``LearnedPolicy``   — pure-JAX *inference* of a fitted scheduler from
+    ``repro.core.schedulers`` (Regression / Classification / BO / RL).
+    Fitting stays offline on the design-space dataset; the fitted model then
+    routes a million-request stream inside one jitted call.
+  * ``CapacityLimiter`` — composable wrapper enforcing per-(region, tier)
+    request caps per hourly window (CASPER-style load caps), spilling each
+    over-cap request to its next-best *feasible* tier via a ``lax.scan`` over
+    windows.
+
+Protocol (all methods jit-compatible over stacked batches; ``env.ci`` is
+per-request ``(N, 5)`` — the fleet form — while ``interference`` /
+``net_slowdown`` stay shared):
+
+  ``scores(w, env, avail, hour=None) -> (N, 3)``
+      per-tier preference scores, lower is better; +inf marks tiers the
+      policy would never pick (infeasible and/or unavailable). ``argmin``
+      over a row IS the policy's decision for that request, which is what
+      lets wrappers like ``CapacityLimiter`` re-rank and spill.
+  ``decide(w, env, avail, state, *, region=None, hour=None, outputs=None)
+      -> (targets, new_state)``
+      the decision entry point. ``state`` is a policy-owned pytree threaded
+      through the call (capacity counters, ...); stateless policies pass it
+      through. ``outputs`` is an optional precomputed
+      ``carbon_model.RouteOutputs`` hint: the fleet router already evaluates
+      Table 1 for carbon accounting, and oracle-family policies reuse it so
+      the default path stays bit-identical to routing without the policy
+      layer (and XLA sees a single evaluation).
+  ``initial_state(n_regions, n_requests) -> pytree``
+      the state to thread into the first ``decide``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carbon_model
+from repro.core.carbon_model import Environment, RouteOutputs
+from repro.core.constants import N_TARGETS
+from repro.core.infrastructure import InfraParams
+from repro.core.schedulers import SchedulerDataset
+from repro.core.workloads import Workload
+
+
+class RoutingPolicy(abc.ABC):
+    """Base class: a policy is ``scores`` + (optionally stateful) ``decide``.
+
+    The default ``decide`` is the stateless argmin over ``scores`` — exactly
+    ``carbon_model.pick_target`` semantics when the scores use the same
+    +inf encoding (see ``OraclePolicy.scores``).
+    """
+
+    # NOTE: deliberately not annotated — dataclass subclasses would inherit
+    # an annotated class attribute as a defaulted field.
+    name = "policy"
+
+    def initial_state(self, n_regions: int, n_requests: int) -> Any:
+        return ()
+
+    @abc.abstractmethod
+    def scores(self, w: Workload, env: Environment, avail: jax.Array, *,
+               hour: jax.Array | None = None) -> jax.Array:
+        """(N, 3) per-tier scores, lower is better, +inf = never pick."""
+
+    def decide(self, w: Workload, env: Environment, avail: jax.Array,
+               state: Any, *, region: jax.Array | None = None,
+               hour: jax.Array | None = None,
+               outputs: RouteOutputs | None = None
+               ) -> tuple[jax.Array, Any]:
+        s = self.scores(w, env, avail, hour=hour)
+        return jnp.argmin(s, axis=-1).astype(jnp.int32), state
+
+
+# ---------------------------------------------------------------------------
+# Oracle (Table-1 search) — carbon objective + latency/energy baselines
+# ---------------------------------------------------------------------------
+
+
+def _oracle_scores_one(w: Workload, infra: InfraParams, env: Environment,
+                       avail: jax.Array, metric: str) -> jax.Array:
+    """(3,) score row whose argmin reproduces ``carbon_model.pick_target``:
+    feasible tiers carry the metric, infeasible tiers +inf; when nothing is
+    feasible the row degrades to the carbon fallback over available tiers."""
+    b = carbon_model.evaluate(w, infra, env)
+    ok = carbon_model.feasible(b, w) & avail
+    if metric == "carbon":
+        score = b.total_cf
+    elif metric == "latency":
+        score = b.latency
+    elif metric == "energy":
+        score = carbon_model.evaluate_energy(w, infra, env)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(jnp.any(ok),
+                     jnp.where(ok, score, jnp.inf),
+                     jnp.where(avail, b.total_cf, jnp.inf))
+
+
+@dataclasses.dataclass
+class OraclePolicy(RoutingPolicy):
+    """Exhaustive Table-1 evaluation per request (paper's explorer).
+
+    ``metric`` selects the objective: ``"carbon"`` is GreenScale,
+    ``"latency"``/``"energy"`` are the paper's Fig-5/6 baselines — as
+    policies they route head-to-head on the same stream instead of living as
+    special-cased aggregate columns inside the fleet router.
+    """
+
+    infra: InfraParams
+    metric: str = "carbon"
+
+    def __post_init__(self):
+        if self.metric not in ("carbon", "latency", "energy"):
+            raise ValueError(f"unknown metric {self.metric!r}")
+        self.name = f"oracle-{self.metric}"
+        infra, metric = self.infra, self.metric
+        self._scores_many = jax.vmap(
+            lambda w, env, avail: _oracle_scores_one(w, infra, env, avail,
+                                                     metric),
+            in_axes=(0, Environment(ci=0, interference=None,
+                                    net_slowdown=None), 0))
+
+    def scores(self, w, env, avail, *, hour=None):
+        return self._scores_many(w, env, avail)
+
+    def decide(self, w, env, avail, state, *, region=None, hour=None,
+               outputs=None):
+        out = outputs if outputs is not None else \
+            carbon_model.route_many_envs(w, self.infra, env, avail)
+        t = {"carbon": out.target, "latency": out.target_latency,
+             "energy": out.target_energy}[self.metric]
+        return t, state
+
+
+# ---------------------------------------------------------------------------
+# Learned policies: offline-fitted schedulers routing live streams
+# ---------------------------------------------------------------------------
+
+
+def policy_features(w: Workload, env: Environment,
+                    hour: jax.Array | None = None,
+                    emb_lca: bool = False) -> jax.Array:
+    """(N, 19) raw (un-standardized) feature rows for a live stream.
+
+    Mirrors ``schedulers.build_dataset`` column-for-column — workload
+    descriptor, scenario CI/variance, hour-of-day harmonics, embodied-model
+    flag — so a model fitted on the offline design space reads the same
+    inputs when routing online.
+    """
+    n = w.flops.shape[0]
+    f_w = jnp.stack([
+        jnp.log10(w.flops + 1.0),
+        jnp.log10(w.mem_bytes + 1.0),
+        jnp.log10(w.data_in + 1.0),
+        jnp.log10(w.data_out + 1.0),
+        jnp.log10(w.latency_req + 1e-6),
+        w.continuous,
+    ], axis=-1)
+    bcast = lambda a, k: jnp.broadcast_to(
+        jnp.asarray(a, jnp.float32).reshape(-1, k), (n, k))
+    h = (jnp.zeros((n,), jnp.float32) if hour is None
+         else jnp.asarray(hour, jnp.float32))
+    ang = 2.0 * jnp.pi * h / 24.0
+    return jnp.concatenate([
+        f_w,
+        bcast(env.ci, 5) / 100.0,
+        bcast(env.interference, 3),
+        bcast(env.net_slowdown, 2),
+        jnp.sin(ang)[:, None],
+        jnp.cos(ang)[:, None],
+        jnp.full((n, 1), 1.0 if emb_lca else 0.0, jnp.float32),
+    ], axis=-1)
+
+
+@dataclasses.dataclass
+class LearnedPolicy(RoutingPolicy):
+    """A fitted scheduler routing live streams in pure JAX.
+
+    Built via ``LearnedPolicy.fit(scheduler, train)``: the scheduler's
+    ``fit_params`` runs offline (numpy / host loops allowed), and its static
+    ``jax_scores(params, X)`` becomes the jitted per-request scorer. The
+    training dataset's feature standardization statistics travel along so
+    live feature rows land in the same input distribution.
+    """
+
+    params: Any
+    score_fn: Callable[[Any, jax.Array], jax.Array]
+    feat_mean: jax.Array
+    feat_std: jax.Array
+    emb_lca: bool = False
+    name: str = "learned"
+
+    @classmethod
+    def fit(cls, scheduler, train: SchedulerDataset,
+            emb_lca: bool = False) -> "LearnedPolicy":
+        if train.feat_mean is None or train.feat_std is None:
+            raise ValueError(
+                "dataset has no feature statistics — rebuild it with "
+                "schedulers.build_dataset (feat_mean/feat_std are required "
+                "to featurize live streams)")
+        params = jax.tree.map(jnp.asarray, scheduler.fit_params(train))
+        return cls(name=f"learned-{scheduler.name}", params=params,
+                   score_fn=type(scheduler).jax_scores,
+                   feat_mean=jnp.asarray(train.feat_mean, jnp.float32),
+                   feat_std=jnp.asarray(train.feat_std, jnp.float32),
+                   emb_lca=emb_lca)
+
+    def scores(self, w, env, avail, *, hour=None):
+        X = policy_features(w, env, hour, self.emb_lca)
+        X = (X - self.feat_mean) / self.feat_std
+        return jnp.where(avail, self.score_fn(self.params, X), jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-capped routing (CASPER-style per-tier load caps)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CapacityState:
+    """Threaded state of a ``CapacityLimiter`` decision.
+
+    ``counts``  (R, 3) int32 — capacity-*admitted* assignments so far: shed
+                requests and unroutable requests (no finite-score tier at
+                all, e.g. all-False availability) are excluded, because
+                neither consumed any cap budget.
+    ``shed``    (N,) bool — *routable* requests for which every finite-score
+                tier was at cap in their window. They still receive a
+                nominal target (the inner policy's top pick) because the
+                request must execute *somewhere* — shedding models QoS
+                degradation / deferral, and the fleet aggregates report it —
+                but they never consume cap. Unroutable requests are NOT shed
+                (capacity was never the problem); they take the same
+                degenerate fallback the uncapped router gives them, so
+                generous caps remain an exact no-op.
+    """
+
+    counts: jax.Array
+    shed: jax.Array
+
+
+@dataclasses.dataclass
+class CapacityLimiter(RoutingPolicy):
+    """Wrap any policy with per-(region, tier) request caps per hourly window.
+
+    Each window (default: the 24 hours of the diurnal trace) gets a fresh
+    budget of ``caps[r, t]`` requests per (region, tier); ``jnp.inf`` means
+    uncapped (the natural setting for ``Target.MOBILE`` — the user's own
+    device is not a shared resource). Requests are admitted greedily in
+    stream order against the inner policy's preference ranking: a request
+    whose best tier is full spills to its next-best tier with a finite score
+    (i.e. still feasible+available under the inner policy), and a routable
+    request whose every finite-score tier is at cap is shed (see
+    ``CapacityState``; requests with no finite-score tier at all bypass
+    capacity accounting entirely and keep the uncapped fallback).
+
+    The per-window assignment is vectorized — within a spill round, each
+    request's in-window rank among competitors for the same (region, tier)
+    column comes from a masked cumulative sum, so a window costs O(N·R·3)
+    instead of a million-step sequential scan — and windows are folded with
+    ``lax.scan`` carrying the cumulative counts.
+    """
+
+    inner: RoutingPolicy
+    caps: Any  # array-like (R, 3); jnp.inf = uncapped
+    n_windows: int = 24
+
+    def __post_init__(self):
+        self._caps = jnp.asarray(self.caps, jnp.float32)
+        if self._caps.ndim != 2 or self._caps.shape[1] != N_TARGETS:
+            raise ValueError(f"caps must be (n_regions, {N_TARGETS}), got "
+                             f"{self._caps.shape}")
+        self.name = f"capped-{self.inner.name}"
+
+    def initial_state(self, n_regions: int, n_requests: int) -> CapacityState:
+        if self._caps.shape[0] != n_regions:
+            raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
+                             f"fleet has {n_regions}")
+        return CapacityState(
+            counts=jnp.zeros((n_regions, N_TARGETS), jnp.int32),
+            shed=jnp.zeros((n_requests,), bool))
+
+    def scores(self, w, env, avail, *, hour=None):
+        return self.inner.scores(w, env, avail, hour=hour)
+
+    def decide(self, w, env, avail, state, *, region=None, hour=None,
+               outputs=None):
+        n = w.flops.shape[0]
+        n_cols = self._caps.size
+        region = (jnp.zeros((n,), jnp.int32) if region is None
+                  else jnp.asarray(region, jnp.int32))
+        win = (jnp.zeros((n,), jnp.int32) if hour is None
+               else jnp.asarray(hour, jnp.int32) % self.n_windows)
+        scores = self.scores(w, env, avail, hour=hour)
+        pref = jnp.argsort(scores, axis=1).astype(jnp.int32)  # best-first
+        valid = jnp.isfinite(jnp.take_along_axis(scores, pref, axis=1))
+        caps_flat = self._caps.reshape(-1)
+
+        def window(counts, h):
+            in_win = win == h
+            target = jnp.zeros((n,), jnp.int32)
+            placed = jnp.zeros((n,), bool)
+            win_counts = jnp.zeros((n_cols,), jnp.float32)
+            for k in range(N_TARGETS):  # spill rounds: 1st..3rd choice
+                choice = pref[:, k]
+                want = in_win & ~placed & valid[:, k]
+                col = region * N_TARGETS + choice
+                oh = jax.nn.one_hot(col, n_cols,
+                                    dtype=jnp.float32) * want[:, None]
+                # 1-based arrival rank among this round's competitors for
+                # the same (region, tier) column
+                rank = jnp.take_along_axis(jnp.cumsum(oh, axis=0),
+                                           col[:, None], axis=1)[:, 0]
+                fits = want & (win_counts[col] + rank <= caps_flat[col])
+                target = jnp.where(fits, choice, target)
+                win_counts = win_counts + (oh * fits[:, None]).sum(axis=0)
+                placed = placed | fits
+            # only *routable* leftovers are capacity-shed; a request with no
+            # finite-score tier at all (all-False availability) was never a
+            # capacity decision — it takes the uncapped degenerate fallback
+            shed_w = in_win & ~placed & valid[:, 0]
+            target = jnp.where(in_win & ~placed, pref[:, 0], target)
+            counts = counts + win_counts.reshape(
+                self._caps.shape).astype(jnp.int32)
+            return counts, (jnp.where(in_win, target, 0), shed_w)
+
+        counts, (t_steps, shed_steps) = jax.lax.scan(
+            window, state.counts, jnp.arange(self.n_windows))
+        # each request sits in exactly one window, so the sum selects it
+        targets = t_steps.sum(axis=0).astype(jnp.int32)
+        return targets, CapacityState(counts=counts,
+                                      shed=shed_steps.any(axis=0))

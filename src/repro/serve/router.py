@@ -20,6 +20,11 @@ Two granularities:
     gathered from a (region, hour) table, and the result aggregates
     per-region/per-tier assignment counts plus gCO2 saved vs. the latency-
     and energy-optimal baselines.
+
+Both routers accept ``policy=`` (see ``repro.serve.policy``): the decision-
+maker — Table-1 oracle, fitted scheduler, capacity-capped wrapper — is a
+pluggable ``RoutingPolicy`` running inside the same jitted stream call; the
+default is the carbon oracle and reproduces the pre-policy results exactly.
 """
 
 from __future__ import annotations
@@ -42,6 +47,7 @@ from repro.core.carbon_model import Environment, RouteOutputs
 from repro.core.constants import N_TARGETS
 from repro.core.infrastructure import Fleet, pack_infra, tpu_fleet
 from repro.core.workloads import Workload, batch_workloads
+from repro.serve.policy import OraclePolicy, RoutingPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,11 +158,17 @@ def _decisions_from_outputs(out: RouteOutputs) -> list[RouteDecision]:
 
 @dataclasses.dataclass
 class GreenScaleRouter:
-    """Carbon-aware tier selection for a serving fleet (one environment)."""
+    """Carbon-aware tier selection for a serving fleet (one environment).
+
+    ``policy`` plugs any ``repro.serve.policy.RoutingPolicy`` into the
+    decision; the default (None) is the Table-1 carbon oracle on the exact
+    pre-policy code path, so existing results are reproduced bit-for-bit.
+    """
 
     cfg: ModelConfig
     fleet: Fleet = dataclasses.field(default_factory=tpu_fleet)
     embodied_model: str = "act"
+    policy: RoutingPolicy | None = None
 
     def __post_init__(self):
         self._infra = pack_infra(self.fleet, self.embodied_model)
@@ -172,6 +184,12 @@ class GreenScaleRouter:
 
         self._route_one = _route_one
         self._route_many = _route_many
+
+    @property
+    def infra(self):
+        """Packed ``InfraParams`` of this router's fleet — the public handle
+        for building policies: ``OraclePolicy(router.infra, ...)``."""
+        return self._infra
 
     def route(self, req: Request, env: Environment) -> RouteDecision:
         w = request_workload(self.cfg, req)
@@ -191,10 +209,33 @@ class GreenScaleRouter:
         out = self.route_batch_arrays(RequestBatch.from_requests(reqs), env)
         return _decisions_from_outputs(out)
 
-    def route_batch_arrays(self, batch: RequestBatch, env: Environment
+    def route_batch_arrays(self, batch: RequestBatch, env: Environment,
+                           hour: float | np.ndarray | None = None
                            ) -> RouteOutputs:
-        """Array-in/array-out batched routing — the fleet-scale hot path."""
-        return self._route_many(batch.workload(self.cfg), env, batch.avail)
+        """Array-in/array-out batched routing — the fleet-scale hot path.
+
+        With a custom ``policy`` the Table-1 evaluation still supplies the
+        per-tier carbon/latency/feasibility columns (the accounting), and
+        ``target`` is replaced by the policy's decisions. ``hour`` (scalar
+        or (N,)) is forwarded to the policy for time-aware features — a
+        ``LearnedPolicy`` fitted with hour-of-day harmonics treats a batch
+        without it as arriving at midnight.
+        """
+        w = batch.workload(self.cfg)
+        out = self._route_many(w, env, batch.avail)
+        if self.policy is None:
+            return out
+        n = len(batch)
+        env_b = Environment(ci=jnp.broadcast_to(env.ci, (n,) + env.ci.shape),
+                            interference=env.interference,
+                            net_slowdown=env.net_slowdown)
+        if hour is not None:
+            hour = jnp.broadcast_to(jnp.asarray(hour, jnp.float32), (n,))
+        targets, _ = self.policy.decide(
+            w, env_b, batch.avail, self.policy.initial_state(1, n),
+            hour=hour, outputs=out)
+        return dataclasses.replace(out, target=jnp.asarray(targets,
+                                                           jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -228,15 +269,25 @@ DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FleetRouteResult:
-    """Aggregate result of routing a request stream across the fleet."""
+    """Aggregate result of routing a request stream across the fleet.
+
+    The three reference aggregates put any policy's outcome in context on
+    the *same* stream: ``oracle_carbon_g`` is the carbon-optimal Table-1
+    pick (0 regret for the default policy), ``latency_opt_carbon_g`` /
+    ``energy_opt_carbon_g`` the paper's baseline objectives.
+    """
 
     target: jax.Array  # (N,) int32 chosen tier per request
     carbon_g: jax.Array  # (N,) gCO2 of the chosen tier
     feasible: jax.Array  # (N,) bool — chosen tier meets the QoS constraint
-    counts: jax.Array  # (R, 3) int32 assignments per (region, tier)
+    counts: jax.Array  # (R, 3) int32 capacity-counted assignments per
+    #                    (region, tier); capacity-shed requests are excluded
     total_carbon_g: jax.Array  # () sum of carbon_g
     latency_opt_carbon_g: jax.Array  # () same stream, latency-optimal picks
     energy_opt_carbon_g: jax.Array  # () same stream, energy-optimal picks
+    oracle_carbon_g: jax.Array  # () same stream, carbon-optimal picks
+    infeasible_count: jax.Array  # () int32 picks violating their QoS budget
+    shed_count: jax.Array  # () int32 capacity-shed requests (0 w/o caps)
 
     @property
     def saved_vs_latency_g(self) -> jax.Array:
@@ -245,6 +296,19 @@ class FleetRouteResult:
     @property
     def saved_vs_energy_g(self) -> jax.Array:
         return self.energy_opt_carbon_g - self.total_carbon_g
+
+    @property
+    def extra_vs_oracle_g(self) -> jax.Array:
+        """Carbon regret of this policy vs. the Table-1 carbon oracle."""
+        return self.total_carbon_g - self.oracle_carbon_g
+
+    @property
+    def qos_violation_rate(self) -> jax.Array:
+        return self.infeasible_count / self.target.shape[0]
+
+    @property
+    def shed_rate(self) -> jax.Array:
+        return self.shed_count / self.target.shape[0]
 
 
 @dataclasses.dataclass
@@ -266,6 +330,10 @@ class FleetRouter:
     regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS
     interference: tuple[float, float, float] = (1.0, 1.0, 1.0)
     net_slowdown: tuple[float, float] = (1.0, 1.0)
+    #: decision-maker for the stream; None = Table-1 carbon oracle. Any
+    #: ``repro.serve.policy.RoutingPolicy`` (learned, capacity-capped, ...)
+    #: plugs in here and routes inside the same jitted call.
+    policy: RoutingPolicy | None = None
 
     def __post_init__(self):
         self._infra = pack_infra(self.fleet, self.embodied_model)
@@ -287,6 +355,9 @@ class FleetRouter:
                 [ci_mob, ci_hour, ci_hour, ci_core, ci_hour], axis=-1))
         self._ci_table = jnp.stack(rows)  # (R, 24, 5)
 
+        if self.policy is None:
+            self.policy = OraclePolicy(self._infra)
+        policy = self.policy
         infra = self._infra
         n_regions = len(self.regions)
         interference = self._interference
@@ -294,30 +365,49 @@ class FleetRouter:
 
         @jax.jit
         def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
-                         hour: jax.Array, ci_table: jax.Array
-                         ) -> FleetRouteResult:
+                         hour: jax.Array, ci_table: jax.Array, state
+                         ) -> tuple[FleetRouteResult, object]:
             env = Environment(ci=ci_table[region, hour],  # (N, 5)
                               interference=interference,
                               net_slowdown=net_slowdown)
+            # Table-1 evaluation supplies the carbon/QoS accounting and the
+            # three reference objectives; the policy makes the decision
+            # (oracle-family policies reuse ``out`` via the outputs hint, so
+            # the default path is the pre-policy program, bit-for-bit).
             out = carbon_model.route_many_envs(w, infra, env, avail)
+            targets, new_state = policy.decide(
+                w, env, avail, state, region=region, hour=hour, outputs=out)
+            shed = getattr(new_state, "shed", None)
             take = lambda t: jnp.take_along_axis(
                 out.total_cf, t[:, None], axis=1)[:, 0]
-            carbon = take(out.target)
+            carbon = take(targets)
+            feas = jnp.take_along_axis(out.ok, targets[:, None], axis=1)[:, 0]
+            one_hot = jax.nn.one_hot(targets, N_TARGETS, dtype=jnp.int32)
+            if shed is not None:
+                one_hot = one_hot * (~shed)[:, None].astype(jnp.int32)
             counts = jnp.zeros((n_regions, N_TARGETS), jnp.int32).at[
-                region].add(jax.nn.one_hot(out.target, N_TARGETS,
-                                           dtype=jnp.int32))
+                region].add(one_hot)
             return FleetRouteResult(
-                target=out.target,
+                target=targets,
                 carbon_g=carbon,
-                feasible=jnp.take_along_axis(
-                    out.ok, out.target[:, None], axis=1)[:, 0],
+                feasible=feas,
                 counts=counts,
                 total_carbon_g=carbon.sum(),
                 latency_opt_carbon_g=take(out.target_latency).sum(),
                 energy_opt_carbon_g=take(out.target_energy).sum(),
-            )
+                oracle_carbon_g=take(out.target).sum(),
+                infeasible_count=(~feas).sum().astype(jnp.int32),
+                shed_count=(jnp.zeros((), jnp.int32) if shed is None
+                            else shed.sum().astype(jnp.int32)),
+            ), new_state
 
         self._fleet_route = _fleet_route
+
+    @property
+    def infra(self):
+        """Packed ``InfraParams`` of this router's fleet — the public handle
+        for building policies: ``OraclePolicy(router.infra, ...)``."""
+        return self._infra
 
     def env_at(self, region: int, hour: int) -> Environment:
         """The exact Environment a request in ``region`` at ``hour`` sees
@@ -331,7 +421,26 @@ class FleetRouter:
                      t_hours: np.ndarray) -> FleetRouteResult:
         """Route a request stream. ``region`` (N,) int region indices,
         ``t_hours`` (N,) arrival times in hours (wrapped modulo 24)."""
+        return self.route_stream_with_state(batch, region, t_hours)[0]
+
+    def route_stream_with_state(
+            self, batch: RequestBatch, region: np.ndarray,
+            t_hours: np.ndarray) -> tuple[FleetRouteResult, object]:
+        """``route_stream`` + the policy's final state (e.g. the
+        ``CapacityState`` counters/shed mask of a ``CapacityLimiter``)."""
         region = jnp.asarray(region, jnp.int32)
         hour = jnp.asarray(np.floor(np.asarray(t_hours)) % 24, jnp.int32)
+        state = self.policy.initial_state(len(self.regions), len(batch))
         return self._fleet_route(batch.workload(self.cfg), batch.avail,
-                                 region, hour, self._ci_table)
+                                 region, hour, self._ci_table, state)
+
+    def admit_windows(self, res: FleetRouteResult, t_hours: np.ndarray,
+                      engine, n_windows: int = 24) -> list[np.ndarray]:
+        """Serving side of the windowed loop: per hourly window, the stream
+        indices ``engine`` admits (``ServeEngine.admit`` over the routed
+        targets, sliced by arrival hour). The same windows the policy's
+        ``lax.scan`` walks while deciding — route once, then each tier-pinned
+        engine drains its slice window by window."""
+        hour = np.floor(np.asarray(t_hours)).astype(np.int64) % n_windows
+        mask = np.asarray(engine.admit(res.target))
+        return [np.nonzero(mask & (hour == h))[0] for h in range(n_windows)]

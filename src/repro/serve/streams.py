@@ -1,0 +1,50 @@
+"""Synthetic request streams — the canonical diurnal LM serving trace.
+
+One definition of the chat/summarize/agent request mix and the
+evening-peaking arrival curve, shared by `examples/serving_router.py` and
+`benchmarks/policy_throughput.py` so the benchmark really routes the stream
+the example demonstrates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.router import RequestBatch
+
+
+def diurnal_hours(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Arrival times (hours): sinusoidal daily load peaking at 20:00."""
+    hours = np.arange(24)
+    rate = 1.0 + 0.8 * np.cos((hours - 20.0) / 24.0 * 2 * np.pi)
+    p = rate / rate.sum()
+    return rng.choice(24, n, p=p) + rng.uniform(0.0, 1.0, n)
+
+
+def synthetic_stream(rng: np.random.Generator, n: int) -> RequestBatch:
+    """Mix of chat (short), summarize (long-prefill), and agent (long-decode)
+    request classes; prompts >= 2048 tokens never fit on-device."""
+    cls = rng.choice(3, n, p=[0.7, 0.2, 0.1])
+    prompt = np.select(
+        [cls == 0, cls == 1, cls == 2],
+        [rng.integers(16, 512, n), rng.integers(2048, 16384, n),
+         rng.integers(256, 2048, n)]).astype(np.float64)
+    new = np.select(
+        [cls == 0, cls == 1, cls == 2],
+        [rng.integers(16, 256, n), rng.integers(32, 128, n),
+         rng.integers(256, 1024, n)]).astype(np.float64)
+    budget = np.select([cls == 0, cls == 1, cls == 2],
+                       [np.full(n, 2.0), np.full(n, 20.0), np.full(n, 30.0)])
+    avail = np.ones((n, 3), bool)
+    avail[:, 0] = prompt < 2048
+    return RequestBatch(prompt_tokens=prompt, max_new_tokens=new,
+                        latency_budget_s=budget,
+                        bytes_per_token=np.full(n, 4.0), available=avail)
+
+
+def diurnal_stream(n: int, n_regions: int, seed: int = 0
+                   ) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
+    """(batch, region, t_hours) — the full fleet-stream triple."""
+    rng = np.random.default_rng(seed)
+    batch = synthetic_stream(rng, n)
+    return batch, rng.integers(0, n_regions, n), diurnal_hours(rng, n)

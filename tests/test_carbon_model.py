@@ -135,6 +135,20 @@ class TestFeasibility:
         t = carbon_model.optimal_target(b, w)
         assert 0 <= int(t) <= 2
 
+    def test_pick_target_all_unavailable_resolves_to_mobile(self):
+        """Pinned degenerate behaviour (documented on pick_target): with an
+        all-False availability mask every masked score is +inf and argmin
+        resolves to index 0 — the request falls back to Target.MOBILE, the
+        only tier that always physically exists — regardless of which tier
+        the scores or the fallback would otherwise prefer."""
+        score = jnp.asarray([9.0, 1.0, 5.0])  # would pick EDGE_DC
+        fallback = jnp.asarray([7.0, 3.0, 1.0])  # would pick HYPERSCALE_DC
+        none_avail = jnp.zeros(3, bool)
+        for ok in (jnp.ones(3, bool), jnp.zeros(3, bool)):
+            t = carbon_model.pick_target(score, ok, fallback,
+                                         avail=none_avail)
+            assert int(t) == int(Target.MOBILE)
+
 
 class TestEmbodiedModels:
     def test_act_below_lca(self):

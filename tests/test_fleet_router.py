@@ -82,7 +82,7 @@ class TestBatchedParity:
         stacked = stack_workloads(
             [request_workload(router.cfg, r) for r in reqs])
         avail = jnp.asarray([r.available for r in reqs])
-        out = carbon_model.route_many(stacked, router._infra, env, avail)
+        out = carbon_model.route_many(stacked, router.infra, env, avail)
         fast = router.route_batch_arrays(RequestBatch.from_requests(reqs),
                                          env)
         np.testing.assert_array_equal(np.asarray(out.target),
@@ -132,6 +132,29 @@ class TestFleetParity:
         res = fleet_router.route_stream(batch, region, rng.uniform(0, 24, n))
         assert float(res.saved_vs_latency_g) >= -1e-6
         assert float(res.saved_vs_energy_g) >= -1e-6
+
+    def test_env_at_parity_at_hour_wrap(self, router, fleet_router):
+        """Arrival times past the first day (t_hours >= 24) wrap modulo 24
+        identically on the fleet path (route_stream) and the scalar hook
+        (env_at) — day two of the trace replays day one."""
+        rng = np.random.default_rng(17)
+        reqs = _random_requests(24, seed=17)
+        region = rng.integers(0, len(fleet_router.regions), len(reqs))
+        t_hours = rng.uniform(24.0, 72.0, len(reqs))  # strictly beyond day 1
+        res = fleet_router.route_stream(RequestBatch.from_requests(reqs),
+                                        region, t_hours)
+        for i, req in enumerate(reqs):
+            # env_at applies the % 24 wrap itself: pass the raw floor hour
+            env = fleet_router.env_at(int(region[i]),
+                                      int(np.floor(t_hours[i])))
+            env_wrapped = fleet_router.env_at(
+                int(region[i]), int(np.floor(t_hours[i])) % 24)
+            np.testing.assert_array_equal(np.asarray(env.ci),
+                                          np.asarray(env_wrapped.ci))
+            d = router.route(req, env)
+            assert d.target == int(res.target[i]), i
+            np.testing.assert_allclose(d.carbon_g, float(res.carbon_g[i]),
+                                       rtol=1e-5)
 
     def test_hour_advances_the_trace(self):
         """A solar-dominated grid must route differently at midday than at
@@ -188,3 +211,24 @@ class TestAdmission:
         eng = ServeEngine.__new__(ServeEngine)
         eng.tier = None
         assert bool(np.asarray(eng.admit(np.array([0, 1, 2]))).all())
+
+    def test_admit_windows_partitions_admitted_slice(self, fleet_router):
+        """The windowed admission loop: per-hour index lists are disjoint,
+        hour-consistent, and union to exactly ServeEngine.admit_indices."""
+        rng = np.random.default_rng(23)
+        n = 301
+        batch = RequestBatch.from_requests(_random_requests(n, seed=23))
+        region = rng.integers(0, len(fleet_router.regions), n)
+        t_hours = rng.uniform(0.0, 48.0, n)
+        res = fleet_router.route_stream(batch, region, t_hours)
+
+        eng = ServeEngine.__new__(ServeEngine)
+        eng.tier = int(Target.HYPERSCALE_DC)
+        windows = fleet_router.admit_windows(res, t_hours, eng)
+        assert len(windows) == 24
+        hour = np.floor(t_hours).astype(int) % 24
+        seen = np.concatenate(windows) if windows else np.array([], int)
+        for h, idx in enumerate(windows):
+            assert (hour[idx] == h).all()
+        np.testing.assert_array_equal(np.sort(seen),
+                                      eng.admit_indices(res.target))

@@ -61,6 +61,32 @@ def test_overhead_accuracy_tradeoff_exists(dataset):
     assert len(overheads) >= 3  # distinct trade-off points
 
 
+def test_bo_active_selection_has_no_duplicates(dataset):
+    """The GP support set must be chosen without replacement — a duplicate
+    adds no information and silently shrinks the effective training set."""
+    train, _ = dataset
+    for seed in range(3):
+        params = BOScheduler(budget=96, seed=seed).fit_params(train)
+        idx = np.asarray(params["idx"])
+        assert len(np.unique(idx)) == len(idx) == 96
+
+
+def test_fit_params_inference_matches_fit_predict(dataset):
+    """fit_params + jax_scores (the LearnedPolicy inference path) must make
+    the same decisions as the offline fit_predict protocol."""
+    import jax.numpy as jnp
+
+    train, test = dataset
+    for s in (RegressionScheduler(), ClassificationScheduler(),
+              BOScheduler(budget=96), RLScheduler()):
+        params = s.fit_params(train)
+        scores = type(s).jax_scores(params, jnp.asarray(test.features))
+        pred = np.asarray(jnp.argmin(scores, axis=1))
+        offline = s.fit_predict(train, test).predict_targets
+        agree = (pred == offline).mean()
+        assert agree > 0.999, (s.name, agree)
+
+
 def test_energy_oracle_leaves_carbon_on_table(dataset):
     """Fig 6: energy-optimal picks carry more carbon than carbon-optimal."""
     train, test = dataset

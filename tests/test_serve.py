@@ -35,6 +35,32 @@ class TestEngine:
         out = eng.generate(toks, max_new_tokens=4)
         assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
 
+    def test_greedy_flag_sets_default_sampling_mode(self):
+        """``greedy`` is the engine's default sampling mode: greedy engines
+        argmax (same as an explicit temperature=0.0), non-greedy engines
+        sample at T=1.0 (same as an explicit temperature=1.0). An explicit
+        ``temperature=`` always overrides the flag."""
+        cfg = get_config("h2o-danube-1.8b", smoke=True)
+        params = init_params(KEY, cfg, dtype=jnp.float32)
+        toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+
+        greedy_eng = ServeEngine(cfg, params, max_seq=48)  # greedy=True
+        np.testing.assert_array_equal(
+            np.asarray(greedy_eng.generate(toks, max_new_tokens=4, key=KEY)),
+            np.asarray(greedy_eng.generate(toks, max_new_tokens=4, key=KEY,
+                                           temperature=0.0)))
+
+        sampler = ServeEngine(cfg, params, max_seq=48, greedy=False)
+        np.testing.assert_array_equal(
+            np.asarray(sampler.generate(toks, max_new_tokens=4, key=KEY)),
+            np.asarray(sampler.generate(toks, max_new_tokens=4, key=KEY,
+                                        temperature=1.0)))
+        # explicit temperature overrides the flag
+        np.testing.assert_array_equal(
+            np.asarray(sampler.generate(toks, max_new_tokens=4, key=KEY,
+                                        temperature=0.0)),
+            np.asarray(greedy_eng.generate(toks, max_new_tokens=4, key=KEY)))
+
     def test_sampling_temperature(self):
         cfg = get_config("deepseek-7b", smoke=True)
         params = init_params(KEY, cfg, dtype=jnp.float32)
