@@ -41,11 +41,13 @@ def lm_routing() -> list[BenchRow]:
             d = router.route(req, env)
             picks.append(d.target)
             if t is None:
-                t = time_us(lambda: router._route_fn(
-                    __import__("repro.serve.router", fromlist=["x"])
-                    .request_workload(cfg, req), env,
-                    __import__("jax.numpy", fromlist=["x"]).asarray(
-                        req.available)))
+                import jax.numpy as jnp
+
+                from repro.serve.router import request_workload
+
+                t = time_us(lambda: router._route_one(
+                    request_workload(cfg, req), env,
+                    jnp.asarray(req.available)))
         hist = {TARGET_NAMES[i]: picks.count(i) for i in range(3)}
         rows.append(BenchRow(
             f"lm_routing/{arch}", t or 0.0,

@@ -18,6 +18,10 @@ def main() -> None:
                     help="substring filter on benchmark group names")
     ap.add_argument("--artifact", default=None,
                     help="dry-run JSON for the roofline table")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert-runs-only mode: tiny streams, one rep — "
+                         "keeps every registration importable/runnable in "
+                         "CI without benchmarking anything meaningful")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -30,11 +34,18 @@ def main() -> None:
 
     groups = [(fig.__name__, fig) for fig in ALL_FIGS]
     groups.append(("lm_design_space", lm_design_space.run))
-    groups.append(("router_throughput", router_throughput.run))
-    # smaller stream than the standalone default keeps the full driver quick;
-    # run `python -m benchmarks.policy_throughput` for the 1M-request numbers
-    groups.append(("policy_throughput",
-                   lambda: policy_throughput.run(n=200_000)))
+    if args.smoke:
+        groups.append(("router_throughput",
+                       lambda: router_throughput.run(n=512,
+                                                     scalar_sample=8)))
+        groups.append(("policy_throughput",
+                       lambda: policy_throughput.run(n=2_000, reps=1)))
+    else:
+        groups.append(("router_throughput", router_throughput.run))
+        # smaller stream than the standalone default keeps the full driver
+        # quick; `python -m benchmarks.policy_throughput` has the 1M numbers
+        groups.append(("policy_throughput",
+                       lambda: policy_throughput.run(n=200_000)))
     if args.artifact:
         groups.append(("roofline", lambda: roofline.run(args.artifact)))
     else:

@@ -1,6 +1,6 @@
 """Serving with the GreenScale router: from one request to a 1M-request fleet.
 
-Four acts:
+Five acts:
 
   1. The paper's Fig-5/9 behaviour live on an LM serving stack: the router
      moves request classes between device / edge / cloud tiers as the grid's
@@ -16,6 +16,11 @@ Four acts:
      capacity-capped oracle (per-(region, tier) caps with spill). Add
      --learned to also fit a regression scheduler offline and route the
      stream with its pure-JAX inference.
+  5. Geo-temporal placement: a multi-region stream with staggered evening
+     peaks routed under binding DC caps — tier-only spill (identity
+     adjacency) vs. cross-region spill on a fully-connected CarbonGrid,
+     where a loaded region's overflow runs in a greener neighbour instead
+     of a worse local tier (or a shed).
 
 Run:  PYTHONPATH=src python examples/serving_router.py [--requests 1000000]
 """
@@ -35,15 +40,17 @@ from repro.core.constants import Target
 from repro.models import init_params
 from repro.serve import (
     CapacityLimiter,
+    CarbonGrid,
     FleetRouter,
     GreenScaleRouter,
     LearnedPolicy,
     OraclePolicy,
+    PlacementPolicy,
     Request,
     ServeEngine,
 )
 
-from repro.serve.streams import diurnal_stream
+from repro.serve.streams import diurnal_stream, multi_region_stream
 
 TARGETS = ("on-device", "edge-DC", "cloud")
 
@@ -166,6 +173,34 @@ def main() -> None:
               f"(+{float(r.extra_vs_oracle_g):.3g} vs oracle)  "
               f"qos {float(r.qos_violation_rate):.2%}  "
               f"shed {int(r.shed_count):,}")
+
+    # --- act 5: geo-temporal placement — tier-only vs cross-region spill ----
+    mbatch, mregion, mt_hours = multi_region_stream(n, len(fleet.regions),
+                                                    seed=0)
+    caps = np.full((len(fleet.regions), 3), np.inf)
+    caps[:, 1] = caps[:, 2] = max(1.0, 0.25 * n / (len(fleet.regions) * 24))
+    xgrid = CarbonGrid.fully_connected(fleet.regions, latency_penalty=1.05)
+    placements = [
+        ("tier-only spill", FleetRouter(full, policy=PlacementPolicy(
+            OraclePolicy(infra), caps))),
+        ("cross-region spill", FleetRouter(full, grid=xgrid,
+                                           policy=PlacementPolicy(
+                                               OraclePolicy(infra), caps))),
+    ]
+    print(f"\ngeo-temporal placement on a {n:,}-request multi-region stream "
+          f"(staggered peaks, capped DC tiers):")
+    for name, fr in placements:
+        r = fr.route_stream(mbatch, mregion, mt_hours)
+        jax.block_until_ready(r.target)
+        t0 = time.perf_counter()
+        r = fr.route_stream(mbatch, mregion, mt_hours)
+        jax.block_until_ready(r.target)
+        dt = time.perf_counter() - t0
+        print(f"  {name:18s}: {n / dt / 1e6:5.2f}M req/s  "
+              f"carbon {float(r.total_carbon_g):9.4g} g  "
+              f"shed {int(r.shed_count):,}  "
+              f"spilled cross-region {int(r.spilled_count):,} "
+              f"({float(r.spill_rate):.1%})")
 
 
 if __name__ == "__main__":

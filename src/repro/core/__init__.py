@@ -2,9 +2,12 @@
 
 from repro.core.constants import Component, EnergySource, Target
 from repro.core.carbon_intensity import (
+    DEFAULT_REGIONS,
+    CarbonGrid,
     ChargingBehavior,
     Grid,
     GridTrace,
+    RegionSpec,
     all_grid_traces,
     grid_trace,
     mobile_carbon_intensity,

@@ -210,6 +210,158 @@ def mobile_carbon_intensity(
     return jnp.sum(prof * trace.ci_hourly)
 
 
+# --- Regions and the unified carbon-grid abstraction ---------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One serving region: its grid trace drives edge + hyperscale CI.
+
+    ``charging`` sets the device-battery CI of the region's users (paper
+    §3.2/Fig 4); ``core_ci`` defaults to the trace's daily mean (the core
+    path crosses many grids, so it sees an averaged intensity).
+    """
+
+    name: str
+    grid: Grid
+    charging: ChargingBehavior = ChargingBehavior.AVERAGE
+    core_ci: float | None = None
+
+
+DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
+    RegionSpec("ciso", Grid.CISO),
+    RegionSpec("nyiso", Grid.NYISO),
+    RegionSpec("urban", Grid.URBAN),
+    RegionSpec("rural", Grid.RURAL),
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CarbonGrid:
+    """Stacked geo-temporal carbon state of a serving fleet — ONE pytree that
+    ``FleetRouter.env_at``, ``route_many_envs``, and placement policies all
+    consume, so region is a first-class routing axis instead of a loop index.
+
+    Arrays (R = number of regions):
+
+    ``ci_hourly``        (R, 24) grid CI per region and hour-of-day, gCO2/kWh.
+    ``ci_mobile``        (R,) device-battery CI (flat across the day — the
+                         battery buffers the grid, paper §3.2).
+    ``ci_core``          (R,) core-network-path CI (crosses many grids, so a
+                         daily average).
+    ``pue``              (R, 24) datacenter power-usage-effectiveness: the
+                         facility multiplier on DC draw (cooling, conversion
+                         losses). Applied to the edge-DC and hyperscale-DC
+                         components of ``table``; 1.0 = the bare-IT accounting
+                         of the paper (and the PR-1/2 parity default).
+    ``adjacency``        (R, R) bool — may a request homed in region r execute
+                         in region c? The diagonal is always True (home is
+                         always a legal placement); ``adjacency == I`` is
+                         tier-only routing (no cross-region spill).
+    ``latency_penalty``  (R, R) float multiplier >= 0 applied to a placement
+                         policy's score when region r's request executes in
+                         region c — the WAN-hop cost expressed in effective
+                         carbon. Diagonal 1.0.
+    """
+
+    ci_hourly: jax.Array
+    ci_mobile: jax.Array
+    ci_core: jax.Array
+    pue: jax.Array
+    adjacency: jax.Array
+    latency_penalty: jax.Array
+
+    @property
+    def n_regions(self) -> int:
+        return self.ci_hourly.shape[0]
+
+    @property
+    def table(self) -> jax.Array:
+        """(R, 24, 5) per-Component CI table in the ``Environment.make``
+        component order [mobile, edge_net, edge_dc, core_net, hyper_dc];
+        edge network and edge DC share CI_E, and PUE scales the two DC
+        components (a facility overhead draws the same grid mix)."""
+        day = lambda a: jnp.broadcast_to(a[:, None], self.ci_hourly.shape)
+        return jnp.stack([
+            day(self.ci_mobile),
+            self.ci_hourly,
+            self.ci_hourly * self.pue,
+            day(self.ci_core),
+            self.ci_hourly * self.pue,
+        ], axis=-1)
+
+    @classmethod
+    def from_regions(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
+                     *, adjacency: np.ndarray | None = None,
+                     latency_penalty: np.ndarray | float | None = None,
+                     pue: np.ndarray | float = 1.0) -> "CarbonGrid":
+        """Build the stacked grid from per-region specs.
+
+        ``adjacency`` defaults to the identity (no cross-region spill);
+        ``latency_penalty`` defaults to 1 everywhere (scalar = that penalty
+        for every off-diagonal hop, 1.0 on the diagonal); ``pue`` is a scalar
+        or a (R, 24) / (R,) / (24,) facility multiplier — a length-R vector
+        is one factor per region (taking precedence over per-hour when
+        R == 24), a (24,) row one factor per hour shared by all regions.
+        """
+        n = len(regions)
+        ci_rows, mob, core = [], [], []
+        for region in regions:
+            trace = grid_trace(region.grid)
+            ci_rows.append(trace.ci_hourly.astype(jnp.float32))
+            mob.append(jnp.asarray(mobile_carbon_intensity(
+                region.charging, trace), jnp.float32))
+            core.append(jnp.asarray(
+                region.core_ci if region.core_ci is not None
+                else trace.ci_mean, jnp.float32))
+        if adjacency is None:
+            adjacency = np.eye(n, dtype=bool)
+        adjacency = np.asarray(adjacency, bool)
+        if adjacency.shape != (n, n):
+            raise ValueError(f"adjacency must be ({n}, {n}), got "
+                             f"{adjacency.shape}")
+        if not adjacency.diagonal().all():
+            raise ValueError("adjacency diagonal must be True — a request's "
+                             "home region is always a legal placement")
+        if latency_penalty is None:
+            penalty = np.ones((n, n), np.float32)
+        elif np.ndim(latency_penalty) == 0:
+            penalty = np.full((n, n), float(latency_penalty), np.float32)
+            np.fill_diagonal(penalty, 1.0)
+        else:
+            penalty = np.asarray(latency_penalty, np.float32)
+            if penalty.shape != (n, n):
+                raise ValueError(f"latency_penalty must be ({n}, {n}), got "
+                                 f"{penalty.shape}")
+            if not (penalty.diagonal() == 1.0).all():
+                raise ValueError(
+                    "latency_penalty diagonal must be 1.0 — executing at "
+                    "home carries no WAN-hop penalty")
+        pue_arr = np.asarray(pue, np.float32)
+        if pue_arr.ndim == 1 and pue_arr.shape[0] == n:
+            pue_arr = pue_arr[:, None]  # (R,) = one facility factor/region
+        return cls(
+            ci_hourly=jnp.stack(ci_rows),
+            ci_mobile=jnp.stack(mob),
+            ci_core=jnp.stack(core),
+            pue=jnp.broadcast_to(jnp.asarray(pue_arr),
+                                 (n, HOURS_PER_DAY)),
+            adjacency=jnp.asarray(adjacency),
+            latency_penalty=jnp.asarray(penalty),
+        )
+
+    @classmethod
+    def fully_connected(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
+                        *, latency_penalty: float = 1.05,
+                        pue: np.ndarray | float = 1.0) -> "CarbonGrid":
+        """Every region may spill to every other at a uniform effective-carbon
+        penalty per WAN hop (CarbonEdge-style mesoscale placement)."""
+        n = len(regions)
+        return cls.from_regions(regions, adjacency=np.ones((n, n), bool),
+                                latency_penalty=latency_penalty, pue=pue)
+
+
 # --- Uncertainty injection (paper §5.2) ---------------------------------------
 
 

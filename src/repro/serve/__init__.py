@@ -1,6 +1,13 @@
-"""Serving: batched engine, GreenScale routers, pluggable routing policies."""
+"""Serving: batched engine, GreenScale routers, pluggable routing policies,
+and the geo-temporal placement layer."""
 
+from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
 from repro.serve.engine import ServeEngine
+from repro.serve.placement import (
+    PlacementPolicy,
+    PlacementState,
+    windowed_segment_ranks,
+)
 from repro.serve.policy import (
     CapacityLimiter,
     CapacityState,
@@ -10,11 +17,9 @@ from repro.serve.policy import (
     policy_features,
 )
 from repro.serve.router import (
-    DEFAULT_REGIONS,
     FleetRouteResult,
     FleetRouter,
     GreenScaleRouter,
-    RegionSpec,
     Request,
     RequestBatch,
     RouteDecision,

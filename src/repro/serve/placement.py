@@ -1,0 +1,372 @@
+"""Geo-temporal placement: joint (region, tier) decisions under capacity.
+
+GreenScale's core claim is that carbon-optimal scheduling is a joint *when
+and where* decision. ``CapacityLimiter`` (PR 2) only answers "where" as
+tier-within-one-region: hyperscale overflow spills to a worse local tier
+even when a neighbouring region is greener. This module makes region a
+first-class placement axis:
+
+  * ``PlacementPolicy`` scores every ``(region, tier)`` pair jointly —
+    the inner policy's score under each *candidate* region's CI (gathered
+    from the fleet's ``CarbonGrid``), times the grid's inter-region
+    latency penalty, masked by its adjacency — and admits requests
+    greedily against per-(region, tier) hourly-window caps, spilling each
+    over-cap request to its next-feasible pair ordered by effective
+    carbon. ``adjacency == I`` is tier-only spill and reproduces the
+    PR-2 ``CapacityLimiter`` decisions bit-for-bit (parity-tested).
+  * Admission uses a *segment-rank* formulation instead of the 24-window
+    ``lax.scan`` + per-window one-hot cumsum: the stream is sorted by
+    arrival window ONCE (a cheap host-side radix sort the fleet router
+    passes in as the ``order`` hint), window boundaries come from one
+    ``jnp.searchsorted``, and each spill round computes every request's
+    within-(window, pair) arrival rank with a single segmented cumulative
+    count — admitted iff ``used[cell] + rank < cap[pair]``. One pass over
+    the stream per round replaces 24 × rounds passes, and per-cell
+    admission totals fall out of the same prefix sums, so the loop has no
+    scatters at all. This is the ROADMAP's segment-rank follow-up to the
+    ~13µs/request CapacityLimiter scan cost.
+
+Semantics (identical to ``CapacityLimiter``, with pairs for tiers): each
+(window, region, tier) cell has a fresh budget of ``caps[r, t]`` requests;
+priority is (spill round, stream order); a routable request whose every
+finite-score pair is at cap is shed — it keeps a nominal placement (its
+first-choice pair) but consumes no cap; a request with no finite-score
+pair at all (e.g. all-False availability) bypasses capacity accounting and
+takes the uncapped degenerate fallback on its *home* region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.carbon_intensity import CarbonGrid
+from repro.core.carbon_model import Environment
+from repro.core.constants import N_TARGETS
+from repro.serve.policy import RoutingPolicy, scores_with_reuse
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlacementState:
+    """Threaded state of a ``PlacementPolicy`` decision.
+
+    ``counts``      (R, 3) int32 — capacity-admitted assignments per
+                    *executed* (region, tier) pair; shed and unroutable
+                    requests are excluded (neither consumed cap budget).
+    ``shed``        (N,) bool — routable requests whose every finite-score
+                    pair was at cap in their window (see module docstring).
+    ``exec_region`` (N,) int32 — the region each request executes in; differs
+                    from the home region exactly for cross-region placements
+                    (shed requests execute nowhere and report home). The
+                    fleet router accounts carbon under THIS region's CI.
+                    ``None`` when the grid's adjacency is the identity —
+                    execution is always at home, and the sentinel lets the
+                    router skip the executed-region re-evaluation entirely.
+    ``shed_pair``   (R, 3) int32 — per-pair shed accounting: shed requests
+                    keyed by their first-choice (region, tier) pair, i.e.
+                    where the demand that could not be placed wanted to run.
+    """
+
+    counts: jax.Array
+    shed: jax.Array
+    exec_region: jax.Array | None
+    shed_pair: jax.Array
+
+
+def windowed_segment_ranks(choice: jax.Array, active: jax.Array,
+                           cell: jax.Array, starts: jax.Array,
+                           ends: jax.Array, n_pairs: int
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Segment-rank core of one spill round, on a stream ALREADY stably
+    sorted by admission segment (ties keep stream order). A segment is an
+    arrival window — or a (window, home region) cell in tier-only mode,
+    where a request's candidates never leave its home.
+
+    ``choice`` is the in-segment column (width ``n_pairs``), ``cell =
+    segment * n_pairs + choice`` the flat capacity cell, and ``starts`` /
+    ``ends`` the segment boundary indices in the sorted stream (one
+    ``searchsorted``, hoisted out of the round loop). Returns ``(rank,
+    totals)``: ``rank[i]`` is the 0-based arrival rank of active row i
+    among active rows sharing its cell, and ``totals`` the per-cell active
+    count over all cells. One segmented cumulative count over the round's
+    (N, n_pairs) one-hot replaces the per-window scan: a row's rank is its
+    exclusive prefix count minus the count at its segment's start, and
+    per-cell totals fall out of the same prefix sums — no scatters
+    anywhere. The prefix counts accumulate per pair COLUMN across the
+    whole stream in int32, so ranks stay exact up to 2**31 active rows
+    per column per round.
+    """
+    act_i = active.astype(jnp.int32)
+    oh = jax.nn.one_hot(choice, n_pairs, dtype=jnp.int32) * act_i[:, None]
+    cs = jnp.cumsum(oh, axis=0)  # inclusive prefix counts, (N, n_pairs)
+    prefix = lambda idx: jnp.where(  # cs rows *before* each index, (W, P)
+        (idx > 0)[:, None], cs[jnp.maximum(idx - 1, 0)], 0)
+    base = prefix(starts).reshape(-1)  # flat (n_windows * n_pairs,)
+    # inclusive count at own row minus own contribution minus window base
+    own = jnp.take_along_axis(cs, choice[:, None], axis=1)[:, 0]
+    rank = own - act_i - base[cell]
+    totals = prefix(ends).reshape(-1) - base
+    return rank, totals
+
+
+@dataclasses.dataclass
+class PlacementPolicy(RoutingPolicy):
+    """Wrap any policy with joint (region, tier) placement under per-pair
+    hourly-window caps and cross-region spill.
+
+    ``caps`` is (R, 3) requests per (region, tier) per window (``jnp.inf`` =
+    uncapped). ``grid`` supplies the candidate regions' CI tables and the
+    adjacency / latency-penalty matrices; leave it ``None`` to have
+    ``FleetRouter`` bind its own grid at construction (the common case — a
+    policy must place against the same grid the router routes against).
+
+    The effective score of pair (r', t) for a request homed in r is
+    ``inner.scores`` evaluated under region r' CI at the request's hour,
+    times ``grid.latency_penalty[r, r']``, or +inf where
+    ``grid.adjacency[r, r']`` is False. Scores are assumed positive (true
+    for carbon/latency/energy oracles and regression-on-carbon policies),
+    so the multiplicative penalty always disfavours remote execution.
+
+    With identity adjacency the policy statically reduces to tier-only
+    spill: one home-region scoring (reusing the router's Table-1 evaluation
+    via ``scores_from_outputs`` when the inner policy offers it), 3 spill
+    rounds, and no executed-region accounting — the segment-rank hot path
+    benchmarked against the PR-2 scan in ``benchmarks/policy_throughput.py``.
+    """
+
+    inner: RoutingPolicy
+    caps: Any  # array-like (R, 3); jnp.inf = uncapped
+    grid: CarbonGrid | None = None
+    n_windows: int = 24
+
+    def __post_init__(self):
+        self._caps = jnp.asarray(self.caps, jnp.float32)
+        if self._caps.ndim != 2 or self._caps.shape[1] != N_TARGETS:
+            raise ValueError(f"caps must be (n_regions, {N_TARGETS}), got "
+                             f"{self._caps.shape}")
+        self.name = f"placed-{self.inner.name}"
+        if self.grid is not None:
+            self._check_grid(self.grid)
+
+    def _check_grid(self, grid: CarbonGrid) -> None:
+        if grid.n_regions != self._caps.shape[0]:
+            raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
+                             f"grid has {grid.n_regions}")
+        # Spill rounds needed: a request has at most (adjacent regions x
+        # feasible tiers) finite pairs, so rounds beyond that never admit.
+        adjacency = np.asarray(grid.adjacency)
+        self._n_rounds = int(adjacency.sum(axis=1).max()) * N_TARGETS
+        # Identity adjacency = tier-only spill: score ONE region per request
+        # (its home), run exactly CapacityLimiter's 3 rounds, and tell the
+        # router execution never leaves home (exec_region=None), so the hot
+        # path pays no cross-region cost it doesn't use.
+        self._diag_only = bool((adjacency == np.eye(len(adjacency),
+                                                    dtype=bool)).all())
+        # Tier-only requests compete only within their own (window, home)
+        # segment, so a finer host-side sort lets the round loop run
+        # width-3 segmented counts instead of width-(R*3); within a
+        # segment all competitors share a home, so stream-order priority
+        # (and CapacityLimiter parity) is unchanged. Cross-region cells
+        # mix homes — there the sort must stay window-only to keep
+        # stream-order priority among competitors from different homes.
+        self.stream_order_key = ("window_region" if self._diag_only
+                                 else "window")
+
+    def bind_grid(self, grid: CarbonGrid) -> None:
+        """Adopt the fleet's grid — or, when one was set explicitly, verify
+        it matches: the policy must place against the same grid the router
+        accounts under, or carbon/feasibility silently diverge."""
+        if self.grid is None:
+            self._check_grid(grid)
+            self.grid = grid
+            return
+        self._check_grid(self.grid)
+        if self.grid is grid:
+            return
+        for field in ("ci_hourly", "ci_mobile", "ci_core", "pue",
+                      "adjacency", "latency_penalty"):
+            if not np.array_equal(np.asarray(getattr(self.grid, field)),
+                                  np.asarray(getattr(grid, field))):
+                raise ValueError(
+                    f"policy grid disagrees with the router's grid on "
+                    f"{field!r} — pass the same CarbonGrid to both (or "
+                    f"leave the policy's grid unset to adopt the "
+                    f"router's)")
+
+    def initial_state(self, n_regions: int, n_requests: int) -> PlacementState:
+        if self._caps.shape[0] != n_regions:
+            raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
+                             f"fleet has {n_regions}")
+        if self.grid is None:
+            raise ValueError(
+                "PlacementPolicy has no CarbonGrid — pass grid= at "
+                "construction or route via a FleetRouter (which binds its "
+                "own grid)")
+        return PlacementState(
+            counts=jnp.zeros((n_regions, N_TARGETS), jnp.int32),
+            shed=jnp.zeros((n_requests,), bool),
+            exec_region=(None if self._diag_only
+                         else jnp.zeros((n_requests,), jnp.int32)),
+            shed_pair=jnp.zeros((n_regions, N_TARGETS), jnp.int32))
+
+    def scores(self, w, env, avail, *, hour=None):
+        return self.inner.scores(w, env, avail, hour=hour)
+
+    def pair_scores(self, w, env, avail, home: jax.Array,
+                    hour: jax.Array) -> jax.Array:
+        """(N, R, 3) effective scores of every (region, tier) pair: the inner
+        score under the candidate region's CI at the request's hour, times
+        the home->candidate latency penalty, +inf where not adjacent.
+
+        Only the infrastructure components relocate with the placement: the
+        user's device and access-network energy is drawn in the HOME region
+        no matter where the request executes, so a candidate's CI row mixes
+        home [mobile, edge_net] with the candidate's [edge_dc, core_net,
+        hyper_dc]. For the same reason the on-device tier exists only at
+        home — remote (region', MOBILE) pairs are structurally +inf."""
+        table = self.grid.table  # (R, 24, 5)
+        ci_all = table[:, hour % 24, :]  # (R, N, 5)
+        home_ci = env.ci  # (N, 5) — the env the router routes/accounts under
+        interference, net_slowdown = env.interference, env.net_slowdown
+
+        def one_region(ci_rows):
+            ci_mixed = jnp.concatenate([home_ci[:, :2], ci_rows[:, 2:]],
+                                       axis=1)
+            env_r = Environment(ci=ci_mixed, interference=interference,
+                                net_slowdown=net_slowdown)
+            return self.inner.scores(w, env_r, avail, hour=hour)
+
+        s = jnp.moveaxis(jax.vmap(one_region)(ci_all), 0, 1)  # (N, R, 3)
+        pen = self.grid.latency_penalty[home]  # (N, R)
+        adj = self.grid.adjacency[home]  # (N, R)
+        n_regions = self._caps.shape[0]
+        remote = jnp.arange(n_regions)[None, :] != home[:, None]  # (N, R)
+        mobile = (jnp.arange(N_TARGETS) == 0)[None, None, :]
+        allowed = adj[:, :, None] & ~(remote[:, :, None] & mobile)
+        return jnp.where(allowed, s * pen[:, :, None], jnp.inf)
+
+    def decide(self, w, env, avail, state, *, region=None, hour=None,
+               outputs=None, order=None, inv_order=None):
+        n = w.flops.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        if n == 0:
+            return jnp.zeros((0,), jnp.int32), state
+        home = (jnp.zeros((n,), jnp.int32) if region is None
+                else jnp.asarray(region, jnp.int32))
+        hr = (jnp.zeros((n,), jnp.int32) if hour is None
+              else jnp.asarray(hour, jnp.int32))
+        win = hr % self.n_windows
+
+        if self._diag_only:
+            # Tier-only spill: the home region is the only candidate. The
+            # diagonal latency penalty scales a request's whole row by one
+            # positive factor, which never reorders it — skip the multiply
+            # so the scores stay bit-identical to CapacityLimiter's.
+            s = scores_with_reuse(self.inner, w, env, avail, hour,
+                                  outputs)  # (N, 3)
+            n_rounds = N_TARGETS
+        else:
+            s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
+            n_rounds = self._n_rounds
+
+        # --- to segment-sorted stream order (everything below runs there) -
+        # Admission segments: (window, home) cells of width 3 in tier-only
+        # mode — all of a request's candidate cells live in its own segment
+        # — or window cells of width R*3 with cross-region spill. Either
+        # way the flat cell id is win * n_pairs + region * 3 + tier, so
+        # ``used`` / ``caps`` indexing is identical in both modes.
+        if order is None:  # no host-provided hint (e.g. GreenScaleRouter)
+            order = jnp.argsort(
+                win * n_regions + home if self._diag_only else win)
+            inv_order = None
+        else:
+            order = jnp.asarray(order, jnp.int32)
+        if inv_order is None:
+            # inverse permutation via scatter-set: ~4x cheaper than argsort
+            inv = jnp.zeros((n,), jnp.int32).at[order].set(
+                jnp.arange(n, dtype=jnp.int32))
+        else:
+            inv = jnp.asarray(inv_order, jnp.int32)
+        win_s, home_s, s_s = win[order], home[order], s[order]
+        # Best-first preference; stable argsort breaks score ties by column
+        # index (tier order in diag mode; region-major, tier-minor over flat
+        # pairs otherwise, matching CapacityLimiter's tier order per region).
+        pref_s = jnp.argsort(s_s, axis=1).astype(jnp.int32)
+        valid_s = jnp.isfinite(jnp.take_along_axis(s_s, pref_s, axis=1))
+        if self._diag_only:
+            home_row_s = s_s  # (N, 3)
+            width = N_TARGETS
+            seg_s = win_s * n_regions + home_s
+            n_segments = self.n_windows * n_regions
+            col_base_s = home_s * N_TARGETS  # pref_s columns are tiers
+        else:
+            home_row_s = jnp.take_along_axis(
+                s_s.reshape(n, n_regions, N_TARGETS),
+                home_s[:, None, None], axis=1)[:, 0]  # (N, 3)
+            width = n_pairs
+            seg_s = win_s
+            n_segments = self.n_windows
+            col_base_s = jnp.zeros((n,), jnp.int32)  # columns are flat pairs
+        starts = jnp.searchsorted(seg_s, jnp.arange(n_segments))
+        ends = jnp.concatenate([starts[1:], jnp.array([n])])
+        caps_flat = self._caps.reshape(-1)
+        caps_cell = jnp.tile(caps_flat, self.n_windows)
+
+        used = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        placed = jnp.zeros((n,), bool)
+        exec_pair = jnp.zeros((n,), jnp.int32)
+        for k in range(min(n_rounds, pref_s.shape[1])):
+            choice = pref_s[:, k]
+            active = valid_s[:, k] & ~placed
+            col = col_base_s + choice  # flat (region, tier) pair
+            cell = seg_s * width + choice  # == win * n_pairs + col
+            rank, totals = windowed_segment_ranks(
+                choice, active, cell, starts, ends, width)
+            # 1-based rank vs <= cap, exactly CapacityLimiter's comparison —
+            # fractional caps admit floor(cap) either way
+            fits = active & (used[cell] + rank + 1.0 <= caps_flat[col])
+            exec_pair = jnp.where(fits, col, exec_pair)
+            placed = placed | fits
+            # ranks are contiguous per cell, so the admitted count is just
+            # min(remaining integral budget, contenders) — no scatter
+            # needed; the floor keeps ``used`` integral under fractional
+            # caps (matching the per-request admissions above)
+            used = used + jnp.minimum(
+                jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals)
+
+        # Only *routable* leftovers are capacity-shed; their nominal
+        # placement is the first-choice pair. A request with no finite-score
+        # pair at all was never a capacity decision — it takes the uncapped
+        # degenerate fallback on its HOME region (argmin of an all-inf row
+        # is MOBILE, matching the uncapped router).
+        shed_s = valid_s[:, 0] & ~placed
+        first_col_s = col_base_s + pref_s[:, 0]  # first-choice flat pair
+        fb_pair = jnp.where(
+            valid_s[:, 0], first_col_s,
+            home_s * N_TARGETS + jnp.argmin(
+                home_row_s, axis=1).astype(jnp.int32))
+        exec_pair = jnp.where(placed, exec_pair, fb_pair)
+
+        # --- back to stream order + aggregates ----------------------------
+        shed = shed_s[inv]
+        # a shed request executes nowhere — report its HOME region (its
+        # nominal target tier keeps the first-choice pair's tier)
+        exec_region = (None if self._diag_only
+                       else jnp.where(shed_s, home_s,
+                                      exec_pair // N_TARGETS)[inv])
+        targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
+        counts = used.reshape(
+            self.n_windows, n_regions, N_TARGETS).sum(axis=0)
+        shed_pair = (jax.nn.one_hot(first_col_s, n_pairs, dtype=jnp.int32)
+                     * shed_s[:, None]).sum(axis=0).reshape(
+            n_regions, N_TARGETS)
+        return targets, PlacementState(
+            counts=state.counts + counts.astype(jnp.int32),
+            shed=shed,
+            exec_region=exec_region,
+            shed_pair=state.shed_pair + shed_pair)

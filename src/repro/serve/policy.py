@@ -26,15 +26,21 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       policy would never pick (infeasible and/or unavailable). ``argmin``
       over a row IS the policy's decision for that request, which is what
       lets wrappers like ``CapacityLimiter`` re-rank and spill.
-  ``decide(w, env, avail, state, *, region=None, hour=None, outputs=None)
-      -> (targets, new_state)``
+  ``decide(w, env, avail, state, *, region=None, hour=None, outputs=None,
+      order=None) -> (targets, new_state)``
       the decision entry point. ``state`` is a policy-owned pytree threaded
       through the call (capacity counters, ...); stateless policies pass it
       through. ``outputs`` is an optional precomputed
       ``carbon_model.RouteOutputs`` hint: the fleet router already evaluates
       Table 1 for carbon accounting, and oracle-family policies reuse it so
       the default path stays bit-identical to routing without the policy
-      layer (and XLA sees a single evaluation).
+      layer (and XLA sees a single evaluation). ``order`` / ``inv_order``
+      are an optional stream-order hint and its inverse — the indices that
+      stably sort the stream by arrival window (or by (window, region) when
+      the policy sets ``stream_order_key = "window_region"``), precomputed
+      on the host by the fleet router (a numpy radix sort) so windowed
+      policies (``PlacementPolicy``) skip an O(N log N) device sort;
+      policies that don't window ignore them.
   ``initial_state(n_regions, n_requests) -> pytree``
       the state to thread into the first ``decide``.
 """
@@ -55,6 +61,23 @@ from repro.core.constants import N_TARGETS
 from repro.core.infrastructure import InfraParams
 from repro.core.schedulers import SchedulerDataset
 from repro.core.workloads import Workload
+
+
+def scores_with_reuse(inner: "RoutingPolicy", w: Workload, env: Environment,
+                      avail: jax.Array, hour: jax.Array | None,
+                      outputs: RouteOutputs | None) -> jax.Array:
+    """``inner.scores`` — or its reconstruction from a precomputed
+    ``RouteOutputs`` when the inner policy offers ``scores_from_outputs``
+    (the router already evaluated Table 1 under this very env). The ONE
+    reuse seam shared by every capacity wrapper, so the scan and
+    segment-rank formulations can never diverge on their score source."""
+    if outputs is not None:
+        reuse = getattr(inner, "scores_from_outputs", None)
+        if reuse is not None:
+            s = reuse(outputs, avail)
+            if s is not None:
+                return s
+    return inner.scores(w, env, avail, hour=hour)
 
 
 class RoutingPolicy(abc.ABC):
@@ -80,7 +103,9 @@ class RoutingPolicy(abc.ABC):
     def decide(self, w: Workload, env: Environment, avail: jax.Array,
                state: Any, *, region: jax.Array | None = None,
                hour: jax.Array | None = None,
-               outputs: RouteOutputs | None = None
+               outputs: RouteOutputs | None = None,
+               order: jax.Array | None = None,
+               inv_order: jax.Array | None = None
                ) -> tuple[jax.Array, Any]:
         s = self.scores(w, env, avail, hour=hour)
         return jnp.argmin(s, axis=-1).astype(jnp.int32), state
@@ -138,8 +163,21 @@ class OraclePolicy(RoutingPolicy):
     def scores(self, w, env, avail, *, hour=None):
         return self._scores_many(w, env, avail)
 
+    def scores_from_outputs(self, out: RouteOutputs,
+                            avail: jax.Array) -> jax.Array | None:
+        """``scores`` reconstructed from a precomputed ``RouteOutputs`` of
+        the same (w, env, avail) — wrappers (``PlacementPolicy``) reuse the
+        router's Table-1 evaluation instead of re-evaluating. ``None`` for
+        the energy metric (RouteOutputs carries no per-tier energy)."""
+        if self.metric == "energy":
+            return None
+        score = out.total_cf if self.metric == "carbon" else out.latency
+        return jnp.where(jnp.any(out.ok, axis=-1, keepdims=True),
+                         jnp.where(out.ok, score, jnp.inf),
+                         jnp.where(avail, out.total_cf, jnp.inf))
+
     def decide(self, w, env, avail, state, *, region=None, hour=None,
-               outputs=None):
+               outputs=None, order=None, inv_order=None):
         out = outputs if outputs is not None else \
             carbon_model.route_many_envs(w, self.infra, env, avail)
         t = {"carbon": out.target, "latency": out.target_latency,
@@ -259,6 +297,13 @@ class CapacityState:
 class CapacityLimiter(RoutingPolicy):
     """Wrap any policy with per-(region, tier) request caps per hourly window.
 
+    This is the PR-2 ``lax.scan``-over-windows formulation, kept as the
+    semantics reference: ``repro.serve.placement.PlacementPolicy`` with
+    ``adjacency == I`` reproduces it bit-for-bit via segment-rank admission
+    (one sort per spill round instead of 24 one-hot cumsums) and extends the
+    spill axis across regions — prefer it on hot paths; both are pinned
+    head-to-head in ``benchmarks/policy_throughput.py``.
+
     Each window (default: the 24 hours of the diurnal trace) gets a fresh
     budget of ``caps[r, t]`` requests per (region, tier); ``jnp.inf`` means
     uncapped (the natural setting for ``Target.MOBILE`` — the user's own
@@ -300,14 +345,14 @@ class CapacityLimiter(RoutingPolicy):
         return self.inner.scores(w, env, avail, hour=hour)
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
-               outputs=None):
+               outputs=None, order=None, inv_order=None):
         n = w.flops.shape[0]
         n_cols = self._caps.size
         region = (jnp.zeros((n,), jnp.int32) if region is None
                   else jnp.asarray(region, jnp.int32))
         win = (jnp.zeros((n,), jnp.int32) if hour is None
                else jnp.asarray(hour, jnp.int32) % self.n_windows)
-        scores = self.scores(w, env, avail, hour=hour)
+        scores = scores_with_reuse(self.inner, w, env, avail, hour, outputs)
         pref = jnp.argsort(scores, axis=1).astype(jnp.int32)  # best-first
         valid = jnp.isfinite(jnp.take_along_axis(scores, pref, axis=1))
         caps_flat = self._caps.reshape(-1)

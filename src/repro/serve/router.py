@@ -38,10 +38,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import carbon_model
 from repro.core.carbon_intensity import (
-    ChargingBehavior,
-    Grid,
-    grid_trace,
-    mobile_carbon_intensity,
+    DEFAULT_REGIONS,
+    CarbonGrid,
+    RegionSpec,
 )
 from repro.core.carbon_model import Environment, RouteOutputs
 from repro.core.constants import N_TARGETS
@@ -95,12 +94,15 @@ class RequestBatch:
         n = len(reqs)
         col = lambda attr: np.fromiter(
             (getattr(r, attr) for r in reqs), np.float64, n)
+        # reshape keeps the (0, 3) availability shape on an empty list —
+        # np.array([]) alone collapses to (0,) and breaks downstream stacking
         return cls(
             prompt_tokens=col("prompt_tokens"),
             max_new_tokens=col("max_new_tokens"),
             latency_budget_s=col("latency_budget_s"),
             bytes_per_token=col("bytes_per_token"),
-            available=np.array([r.available for r in reqs], bool),
+            available=np.array([r.available for r in reqs],
+                               bool).reshape(n, 3),
         )
 
     def workload(self, cfg: ModelConfig) -> Workload:
@@ -206,6 +208,8 @@ class GreenScaleRouter:
     def route_batch(self, reqs: list[Request], env: Environment
                     ) -> list[RouteDecision]:
         """All requests in one jitted vmap (no per-request Python loop)."""
+        if not reqs:  # avoid jitting a zero-length program for nothing
+            return []
         out = self.route_batch_arrays(RequestBatch.from_requests(reqs), env)
         return _decisions_from_outputs(out)
 
@@ -243,29 +247,6 @@ class GreenScaleRouter:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(frozen=True)
-class RegionSpec:
-    """One serving region: its grid trace drives edge + hyperscale CI.
-
-    ``charging`` sets the device-battery CI of the region's users (paper
-    §3.2/Fig 4); ``core_ci`` defaults to the trace's daily mean (the core
-    path crosses many grids, so it sees an averaged intensity).
-    """
-
-    name: str
-    grid: Grid
-    charging: ChargingBehavior = ChargingBehavior.AVERAGE
-    core_ci: float | None = None
-
-
-DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
-    RegionSpec("ciso", Grid.CISO),
-    RegionSpec("nyiso", Grid.NYISO),
-    RegionSpec("urban", Grid.URBAN),
-    RegionSpec("rural", Grid.RURAL),
-)
-
-
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FleetRouteResult:
@@ -273,21 +254,34 @@ class FleetRouteResult:
 
     The three reference aggregates put any policy's outcome in context on
     the *same* stream: ``oracle_carbon_g`` is the carbon-optimal Table-1
-    pick (0 regret for the default policy), ``latency_opt_carbon_g`` /
-    ``energy_opt_carbon_g`` the paper's baseline objectives.
+    pick under each request's HOME region (0 regret for the default policy;
+    a cross-region placement policy can legitimately beat it),
+    ``latency_opt_carbon_g`` / ``energy_opt_carbon_g`` the paper's baseline
+    objectives.
+
+    ``exec_region`` is where each request actually executes — equal to the
+    home region except for cross-region placements (``PlacementPolicy``
+    spill), whose carbon is accounted under the executing region's CI.
     """
 
     target: jax.Array  # (N,) int32 chosen tier per request
-    carbon_g: jax.Array  # (N,) gCO2 of the chosen tier
+    carbon_g: jax.Array  # (N,) gCO2 of the chosen tier (executing region CI)
     feasible: jax.Array  # (N,) bool — chosen tier meets the QoS constraint
     counts: jax.Array  # (R, 3) int32 capacity-counted assignments per
-    #                    (region, tier); capacity-shed requests are excluded
-    total_carbon_g: jax.Array  # () sum of carbon_g
+    #                    *executed* (region, tier); shed requests excluded
+    total_carbon_g: jax.Array  # () sum of carbon_g — shed requests count at
+    #                    their nominal placement (they must run eventually)
+    routed_carbon_g: jax.Array  # () sum of carbon_g over NON-shed requests
+    #                    only — compare capped configs with different shed
+    #                    rates on this, not on total_carbon_g
     latency_opt_carbon_g: jax.Array  # () same stream, latency-optimal picks
     energy_opt_carbon_g: jax.Array  # () same stream, energy-optimal picks
     oracle_carbon_g: jax.Array  # () same stream, carbon-optimal picks
     infeasible_count: jax.Array  # () int32 picks violating their QoS budget
     shed_count: jax.Array  # () int32 capacity-shed requests (0 w/o caps)
+    exec_region: jax.Array  # (N,) int32 executing region (= home w/o spill)
+    spilled_count: jax.Array  # () int32 requests executed off-home (0 w/o
+    #                           cross-region placement)
 
     @property
     def saved_vs_latency_g(self) -> jax.Array:
@@ -310,18 +304,33 @@ class FleetRouteResult:
     def shed_rate(self) -> jax.Array:
         return self.shed_count / self.target.shape[0]
 
+    @property
+    def spill_rate(self) -> jax.Array:
+        """Fraction of the stream executed outside its home region."""
+        return self.spilled_count / self.target.shape[0]
+
 
 @dataclasses.dataclass
 class FleetRouter:
     """Route a (region, time)-tagged request stream against regional grids.
 
-    Per region, a (24, 5) carbon-intensity table is prebuilt from its
-    ``GridTrace``: device CI from the charging behaviour (a battery buffers
-    the grid, so it is flat across the day), edge network/DC CI from the
-    hourly trace, core CI from the trace mean, hyperscale CI from the hourly
-    trace. Routing gathers each request's CI row by (region, hour-of-day) —
-    the trace "plays" as the stream's timestamps advance — and vmaps the
-    scalar Table-1 core once over the whole stream.
+    The fleet's geo-temporal carbon state lives in ONE ``CarbonGrid`` pytree
+    (``self.grid``): per-region (24, 5) component-CI tables — device CI from
+    the charging behaviour (a battery buffers the grid, so it is flat across
+    the day), edge network/DC CI from the hourly trace, core CI from the
+    trace mean, hyperscale CI from the hourly trace, all PUE-scaled on the
+    DC components — plus the inter-region adjacency / latency-penalty
+    matrices placement policies spill along. Routing gathers each request's
+    CI row by (region, hour-of-day) — the trace "plays" as the stream's
+    timestamps advance — and vmaps the scalar Table-1 core once over the
+    whole stream.
+
+    Pass ``grid=`` to control spill topology / PUE (e.g.
+    ``CarbonGrid.fully_connected(regions)``); the default is
+    ``CarbonGrid.from_regions(regions)`` — identity adjacency, PUE 1 — which
+    reproduces the pre-grid router bit-for-bit. A policy with a
+    ``bind_grid`` hook (``PlacementPolicy``) that was built without an
+    explicit grid adopts the router's at construction.
     """
 
     cfg: ModelConfig
@@ -331,32 +340,30 @@ class FleetRouter:
     interference: tuple[float, float, float] = (1.0, 1.0, 1.0)
     net_slowdown: tuple[float, float] = (1.0, 1.0)
     #: decision-maker for the stream; None = Table-1 carbon oracle. Any
-    #: ``repro.serve.policy.RoutingPolicy`` (learned, capacity-capped, ...)
-    #: plugs in here and routes inside the same jitted call.
+    #: ``repro.serve.policy.RoutingPolicy`` (learned, capacity-capped,
+    #: placement, ...) plugs in here and routes inside the same jitted call.
     policy: RoutingPolicy | None = None
+    #: unified carbon-grid abstraction; None = built from ``regions`` with
+    #: identity adjacency (no cross-region spill) and PUE 1.
+    grid: CarbonGrid | None = None
 
     def __post_init__(self):
         self._infra = pack_infra(self.fleet, self.embodied_model)
         self._interference = jnp.asarray(self.interference, jnp.float32)
         self._net_slowdown = jnp.asarray(self.net_slowdown, jnp.float32)
 
-        rows = []
-        for region in self.regions:
-            trace = grid_trace(region.grid)
-            ci_mob = jnp.full((24,), mobile_carbon_intensity(
-                region.charging, trace), jnp.float32)
-            ci_hour = trace.ci_hourly.astype(jnp.float32)
-            core = region.core_ci if region.core_ci is not None else \
-                trace.ci_mean
-            ci_core = jnp.full((24,), core, jnp.float32)
-            # Component order [mobile, edge_net, edge_dc, core_net, hyper_dc];
-            # edge network and edge DC share CI_E (Environment.make).
-            rows.append(jnp.stack(
-                [ci_mob, ci_hour, ci_hour, ci_core, ci_hour], axis=-1))
-        self._ci_table = jnp.stack(rows)  # (R, 24, 5)
+        if self.grid is None:
+            self.grid = CarbonGrid.from_regions(self.regions)
+        elif self.grid.n_regions != len(self.regions):
+            raise ValueError(f"grid covers {self.grid.n_regions} regions, "
+                             f"router has {len(self.regions)}")
+        self._ci_table = self.grid.table  # (R, 24, 5)
 
         if self.policy is None:
             self.policy = OraclePolicy(self._infra)
+        bind = getattr(self.policy, "bind_grid", None)
+        if bind is not None:
+            bind(self.grid)
         policy = self.policy
         infra = self._infra
         n_regions = len(self.regions)
@@ -365,7 +372,8 @@ class FleetRouter:
 
         @jax.jit
         def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
-                         hour: jax.Array, ci_table: jax.Array, state
+                         hour: jax.Array, ci_table: jax.Array, state,
+                         order: jax.Array, inv_order: jax.Array
                          ) -> tuple[FleetRouteResult, object]:
             env = Environment(ci=ci_table[region, hour],  # (N, 5)
                               interference=interference,
@@ -376,29 +384,72 @@ class FleetRouter:
             # the default path is the pre-policy program, bit-for-bit).
             out = carbon_model.route_many_envs(w, infra, env, avail)
             targets, new_state = policy.decide(
-                w, env, avail, state, region=region, hour=hour, outputs=out)
+                w, env, avail, state, region=region, hour=hour, outputs=out,
+                order=order, inv_order=inv_order)
             shed = getattr(new_state, "shed", None)
-            take = lambda t: jnp.take_along_axis(
-                out.total_cf, t[:, None], axis=1)[:, 0]
-            carbon = take(targets)
-            feas = jnp.take_along_axis(out.ok, targets[:, None], axis=1)[:, 0]
-            one_hot = jax.nn.one_hot(targets, N_TARGETS, dtype=jnp.int32)
+            exec_region = getattr(new_state, "exec_region", None)
+            take = lambda o, t: jnp.take_along_axis(
+                o.total_cf, t[:, None], axis=1)[:, 0]
+            if exec_region is None:
+                # no cross-region placement: execute where you arrived
+                exec_region = region
+                spilled = jnp.zeros((), jnp.int32)
+                carbon = take(out, targets)
+                feas = jnp.take_along_axis(out.ok, targets[:, None],
+                                           axis=1)[:, 0]
+            else:
+                # carbon/QoS accounting under the EXECUTING region's CI for
+                # rows that moved; unmoved rows keep the home-region values
+                # bit-for-bit (adjacency == I parity with tier-only spill).
+                # Only the infrastructure relocates: the device and access
+                # network still draw energy in the HOME region, so the
+                # executing env mixes home [mobile, edge_net] CI with the
+                # executing region's [edge_dc, core_net, hyper_dc] — the
+                # same mixing PlacementPolicy.pair_scores decides with.
+                ci_exec = jnp.concatenate(
+                    [env.ci[:, :2], ci_table[exec_region, hour][:, 2:]],
+                    axis=1)
+                env_exec = Environment(ci=ci_exec,
+                                       interference=interference,
+                                       net_slowdown=net_slowdown)
+                out_exec = carbon_model.route_many_envs(w, infra, env_exec,
+                                                        avail)
+                moved = exec_region != region
+                if shed is not None:
+                    moved = moved & ~shed
+                spilled = moved.sum().astype(jnp.int32)
+                carbon = jnp.where(moved, take(out_exec, targets),
+                                   take(out, targets))
+                feas = jnp.where(
+                    moved,
+                    jnp.take_along_axis(out_exec.ok, targets[:, None],
+                                        axis=1)[:, 0],
+                    jnp.take_along_axis(out.ok, targets[:, None],
+                                        axis=1)[:, 0])
+            # (region, tier) assignment counts as a one-hot reduction over
+            # the flattened pair index — a dense sum, not an N-wide scatter
+            pair = exec_region * N_TARGETS + targets
+            one_hot = jax.nn.one_hot(pair, n_regions * N_TARGETS,
+                                     dtype=jnp.int32)
             if shed is not None:
                 one_hot = one_hot * (~shed)[:, None].astype(jnp.int32)
-            counts = jnp.zeros((n_regions, N_TARGETS), jnp.int32).at[
-                region].add(one_hot)
+            counts = one_hot.sum(axis=0).reshape(n_regions, N_TARGETS)
             return FleetRouteResult(
                 target=targets,
                 carbon_g=carbon,
                 feasible=feas,
                 counts=counts,
                 total_carbon_g=carbon.sum(),
-                latency_opt_carbon_g=take(out.target_latency).sum(),
-                energy_opt_carbon_g=take(out.target_energy).sum(),
-                oracle_carbon_g=take(out.target).sum(),
+                routed_carbon_g=(carbon.sum() if shed is None
+                                 else (carbon * ~shed).sum()),
+                latency_opt_carbon_g=take(out, out.target_latency).sum(),
+                energy_opt_carbon_g=take(out, out.target_energy).sum(),
+                oracle_carbon_g=take(out, out.target).sum(),
                 infeasible_count=(~feas).sum().astype(jnp.int32),
                 shed_count=(jnp.zeros((), jnp.int32) if shed is None
                             else shed.sum().astype(jnp.int32)),
+                exec_region=exec_region,
+                spilled_count=spilled,
             ), new_state
 
         self._fleet_route = _fleet_route
@@ -412,7 +463,8 @@ class FleetRouter:
     def env_at(self, region: int, hour: int) -> Environment:
         """The exact Environment a request in ``region`` at ``hour`` sees
         (the scalar-parity hook: GreenScaleRouter.route against this env
-        must reproduce the fleet decision)."""
+        must reproduce the fleet decision). Indexes the cached
+        ``CarbonGrid`` table — ``grid.table`` is recomputed per access."""
         return Environment(ci=self._ci_table[region, hour % 24],
                            interference=self._interference,
                            net_slowdown=self._net_slowdown)
@@ -427,12 +479,33 @@ class FleetRouter:
             self, batch: RequestBatch, region: np.ndarray,
             t_hours: np.ndarray) -> tuple[FleetRouteResult, object]:
         """``route_stream`` + the policy's final state (e.g. the
-        ``CapacityState`` counters/shed mask of a ``CapacityLimiter``)."""
-        region = jnp.asarray(region, jnp.int32)
-        hour = jnp.asarray(np.floor(np.asarray(t_hours)) % 24, jnp.int32)
+        ``PlacementState`` counters/shed mask of a ``PlacementPolicy``)."""
+        hour_np = (np.floor(np.asarray(t_hours)) % 24).astype(np.int32)
+        region_np = np.asarray(region).astype(np.int32)
+        # stream-order hint: stable radix sort by arrival window — or by
+        # (window, home region) when the policy wants finer segments
+        # (tier-only PlacementPolicy) — on the host; only computed for
+        # policies that declare a ``stream_order_key`` (the default path
+        # must not pay an O(N log N) sort it never consumes). The window
+        # key honours the policy's own window count so the sort stays
+        # segment-contiguous for n_windows != 24 too.
+        order_key = getattr(self.policy, "stream_order_key", None)
+        if order_key is None:
+            order = inv_order = None
+        else:
+            win_np = hour_np % getattr(self.policy, "n_windows", 24)
+            key = (win_np * len(self.regions) + region_np
+                   if order_key == "window_region" else win_np)
+            order_np = np.argsort(key, kind="stable").astype(np.int32)
+            inv_np = np.empty_like(order_np)
+            inv_np[order_np] = np.arange(len(order_np), dtype=np.int32)
+            order, inv_order = jnp.asarray(order_np), jnp.asarray(inv_np)
+        region = jnp.asarray(region_np)
+        hour = jnp.asarray(hour_np)
         state = self.policy.initial_state(len(self.regions), len(batch))
         return self._fleet_route(batch.workload(self.cfg), batch.avail,
-                                 region, hour, self._ci_table, state)
+                                 region, hour, self._ci_table, state,
+                                 order, inv_order)
 
     def admit_windows(self, res: FleetRouteResult, t_hours: np.ndarray,
                       engine, n_windows: int = 24) -> list[np.ndarray]:

@@ -13,10 +13,11 @@ import numpy as np
 from repro.serve.router import RequestBatch
 
 
-def diurnal_hours(rng: np.random.Generator, n: int) -> np.ndarray:
-    """Arrival times (hours): sinusoidal daily load peaking at 20:00."""
+def diurnal_hours(rng: np.random.Generator, n: int,
+                  peak: float = 20.0) -> np.ndarray:
+    """Arrival times (hours): sinusoidal daily load peaking at ``peak``."""
     hours = np.arange(24)
-    rate = 1.0 + 0.8 * np.cos((hours - 20.0) / 24.0 * 2 * np.pi)
+    rate = 1.0 + 0.8 * np.cos((hours - peak) / 24.0 * 2 * np.pi)
     p = rate / rate.sum()
     return rng.choice(24, n, p=p) + rng.uniform(0.0, 1.0, n)
 
@@ -48,3 +49,33 @@ def diurnal_stream(n: int, n_regions: int, seed: int = 0
     rng = np.random.default_rng(seed)
     batch = synthetic_stream(rng, n)
     return batch, rng.integers(0, n_regions, n), diurnal_hours(rng, n)
+
+
+def multi_region_stream(
+    n: int, n_regions: int, seed: int = 0,
+    region_weights: np.ndarray | None = None,
+    peak_hours: np.ndarray | None = None,
+) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
+    """Fleet stream with per-region arrival skew — the cross-region spill
+    scenario: regions carry unequal load shares and peak at staggered local
+    evenings, so a loaded region hits its caps while a neighbour (possibly
+    greener at that hour) still has headroom.
+
+    ``region_weights`` defaults to a linear ramp (the busiest region carries
+    ~3x the quietest); ``peak_hours`` defaults to evenly staggered peaks
+    (timezone-like offsets of 24 / n_regions hours).
+    """
+    rng = np.random.default_rng(seed)
+    batch = synthetic_stream(rng, n)
+    if region_weights is None:
+        region_weights = np.linspace(3.0, 1.0, n_regions)
+    w = np.asarray(region_weights, np.float64)
+    if peak_hours is None:
+        peak_hours = (20.0 + np.arange(n_regions) * 24.0 / n_regions) % 24.0
+    region = rng.choice(n_regions, n, p=w / w.sum())
+    t_hours = np.empty(n)
+    for r in range(n_regions):
+        idx = region == r
+        t_hours[idx] = diurnal_hours(rng, int(idx.sum()),
+                                     peak=float(peak_hours[r]))
+    return batch, region, t_hours

@@ -198,6 +198,24 @@ class TestInfeasibleFallback:
         assert targets == [router.route(r, env).target for r in reqs]
 
 
+class TestEmptyBatch:
+    def test_from_requests_empty_returns_empty_batch(self):
+        batch = RequestBatch.from_requests([])
+        assert len(batch) == 0
+        assert batch.prompt_tokens.shape == (0,)
+        assert batch.available.shape == (0, 3)
+
+    def test_route_batch_empty_returns_empty_list(self, router):
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        assert router.route_batch([], env) == []
+
+    def test_route_batch_arrays_empty(self, router):
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        out = router.route_batch_arrays(RequestBatch.from_requests([]), env)
+        assert np.asarray(out.target).shape == (0,)
+        assert np.asarray(out.total_cf).shape == (0, 3)
+
+
 class TestAdmission:
     def test_admit_mask_and_indices(self):
         eng = ServeEngine.__new__(ServeEngine)  # no params needed for admit
