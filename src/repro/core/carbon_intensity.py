@@ -263,6 +263,13 @@ class CarbonGrid:
                          policy's score when region r's request executes in
                          region c — the WAN-hop cost expressed in effective
                          carbon. Diagonal 1.0.
+    ``rtt_s``            (R, R) float seconds added to the END-TO-END latency
+                         when region r's request executes in region c — the
+                         WAN hop as wall-clock, entering the QoS feasibility
+                         check so tight-budget requests refuse remote
+                         placement outright (vs ``latency_penalty``, which
+                         only re-ranks). Diagonal 0.0; the all-zeros default
+                         reproduces the pre-RTT decisions bit-for-bit.
     """
 
     ci_hourly: jax.Array
@@ -271,6 +278,7 @@ class CarbonGrid:
     pue: jax.Array
     adjacency: jax.Array
     latency_penalty: jax.Array
+    rtt_s: jax.Array
 
     @property
     def n_regions(self) -> int:
@@ -295,7 +303,8 @@ class CarbonGrid:
     def from_regions(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
                      *, adjacency: np.ndarray | None = None,
                      latency_penalty: np.ndarray | float | None = None,
-                     pue: np.ndarray | float = 1.0) -> "CarbonGrid":
+                     pue: np.ndarray | float = 1.0,
+                     rtt_s: np.ndarray | float | None = None) -> "CarbonGrid":
         """Build the stacked grid from per-region specs.
 
         ``adjacency`` defaults to the identity (no cross-region spill);
@@ -303,7 +312,9 @@ class CarbonGrid:
         for every off-diagonal hop, 1.0 on the diagonal); ``pue`` is a scalar
         or a (R, 24) / (R,) / (24,) facility multiplier — a length-R vector
         is one factor per region (taking precedence over per-hour when
-        R == 24), a (24,) row one factor per hour shared by all regions.
+        R == 24), a (24,) row one factor per hour shared by all regions;
+        ``rtt_s`` defaults to 0 everywhere (scalar = that round-trip for
+        every off-diagonal hop, 0.0 on the diagonal).
         """
         n = len(regions)
         ci_rows, mob, core = [], [], []
@@ -338,6 +349,20 @@ class CarbonGrid:
                 raise ValueError(
                     "latency_penalty diagonal must be 1.0 — executing at "
                     "home carries no WAN-hop penalty")
+        if rtt_s is None:
+            rtt = np.zeros((n, n), np.float32)
+        elif np.ndim(rtt_s) == 0:
+            rtt = np.full((n, n), float(rtt_s), np.float32)
+            np.fill_diagonal(rtt, 0.0)
+        else:
+            rtt = np.asarray(rtt_s, np.float32)
+            if rtt.shape != (n, n):
+                raise ValueError(f"rtt_s must be ({n}, {n}), got {rtt.shape}")
+            if not (rtt.diagonal() == 0.0).all():
+                raise ValueError("rtt_s diagonal must be 0.0 — executing at "
+                                 "home adds no WAN hop")
+            if (rtt < 0.0).any():
+                raise ValueError("rtt_s must be non-negative")
         pue_arr = np.asarray(pue, np.float32)
         if pue_arr.ndim == 1 and pue_arr.shape[0] == n:
             pue_arr = pue_arr[:, None]  # (R,) = one facility factor/region
@@ -349,17 +374,21 @@ class CarbonGrid:
                                  (n, HOURS_PER_DAY)),
             adjacency=jnp.asarray(adjacency),
             latency_penalty=jnp.asarray(penalty),
+            rtt_s=jnp.asarray(rtt),
         )
 
     @classmethod
     def fully_connected(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
                         *, latency_penalty: float = 1.05,
-                        pue: np.ndarray | float = 1.0) -> "CarbonGrid":
+                        pue: np.ndarray | float = 1.0,
+                        rtt_s: np.ndarray | float | None = None
+                        ) -> "CarbonGrid":
         """Every region may spill to every other at a uniform effective-carbon
         penalty per WAN hop (CarbonEdge-style mesoscale placement)."""
         n = len(regions)
         return cls.from_regions(regions, adjacency=np.ones((n, n), bool),
-                                latency_penalty=latency_penalty, pue=pue)
+                                latency_penalty=latency_penalty, pue=pue,
+                                rtt_s=rtt_s)
 
 
 # --- Uncertainty injection (paper §5.2) ---------------------------------------

@@ -205,19 +205,33 @@ def evaluate(w: Workload, infra: InfraParams, env: Environment) -> CFBreakdown:
                        t_comp=t_comp, t_comm=t_comm)
 
 
-def feasible(b: CFBreakdown, w: Workload) -> jax.Array:
-    """(3,) bool — does each target satisfy the QoS latency constraint?"""
-    ok = b.latency <= w.latency_req
-    # Streaming workloads additionally need the network to sustain fps:
-    # per-frame transfer must fit in the frame interval.
+def stream_feasible(t_comm: jax.Array, w: Workload) -> jax.Array:
+    """(3,) bool — fps-sustain half of the QoS check: per-frame transfer must
+    fit in the frame interval on every network hop the target uses. True for
+    non-streaming workloads (CI-free, so factorized evaluators reuse it)."""
     frame_time = jnp.where(w.fps_req > 0, 1.0 / jnp.maximum(w.fps_req, 1e-6),
                            jnp.inf)
     stream_ok = jnp.stack([
         jnp.asarray(True),
-        b.t_comm[0] <= frame_time,
-        (b.t_comm[0] <= frame_time) & (b.t_comm[1] <= frame_time),
+        t_comm[0] <= frame_time,
+        (t_comm[0] <= frame_time) & (t_comm[1] <= frame_time),
     ])
-    return ok & jnp.where(w.continuous > 0, stream_ok, True)
+    return jnp.where(w.continuous > 0, stream_ok, True)
+
+
+def qos_feasible(latency: jax.Array, t_comm: jax.Array, w: Workload,
+                 extra_latency: jax.Array | float = 0.0) -> jax.Array:
+    """(3,) bool QoS check from its CI-free ingredients. ``extra_latency``
+    adds a WAN hop (CarbonGrid.rtt_s) on top of the Table-1 end-to-end
+    latency — a remote placement candidate is infeasible when the hop blows
+    the budget; 0.0 reproduces ``feasible`` exactly."""
+    ok = latency + extra_latency <= w.latency_req
+    return ok & stream_feasible(t_comm, w)
+
+
+def feasible(b: CFBreakdown, w: Workload) -> jax.Array:
+    """(3,) bool — does each target satisfy the QoS latency constraint?"""
+    return qos_feasible(b.latency, b.t_comm, w)
 
 
 def pick_target(score: jax.Array, ok: jax.Array, fallback: jax.Array,
@@ -325,6 +339,106 @@ evaluate_batch = jax.vmap(evaluate, in_axes=(0, None, None))
 
 #: QoS feasibility over stacked breakdowns/workloads (matches evaluate_batch).
 feasible_batch = jax.vmap(feasible, in_axes=(0, 0))
+
+
+# ---------------------------------------------------------------------------
+# Factorized evaluator: operational carbon is LINEAR in carbon intensity
+# (op_cf[t, c] = op_unit[t, c] * ci[c]), embodied carbon / latency / QoS
+# feasibility are CI-free — so ONE Table-1 evaluation at unit CI yields the
+# score of every candidate (region, hour) placement as an einsum against a
+# ``CarbonGrid`` CI table instead of one full sweep per candidate region
+# (the ROADMAP factorization; geo-temporal policies build on this).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnergyFactors:
+    """CI-independent factorization of Table 1 for one request (leading batch
+    axis under vmap — see ``energy_factors_batch``).
+
+    ``op_unit``  (3, 5) grams per (g/kWh): operational CF at unit CI, i.e.
+                 component energy / J_PER_KWH. ``op_unit @ ci`` reproduces
+                 ``evaluate(...).op_cf.sum(-1)`` for any CI row to fp32
+                 tolerance (pinned in tests/test_carbon_model.py).
+    ``emb_cf``   (3, 5) grams, embodied (CI-free).
+    ``latency``  (3,) s end-to-end; ``t_comm`` (2,) network times — together
+                 with the workload these reproduce the QoS check, optionally
+                 with a WAN-hop ``extra_latency`` for remote candidates.
+    """
+
+    op_unit: jax.Array
+    emb_cf: jax.Array
+    latency: jax.Array
+    t_comm: jax.Array
+
+    @property
+    def emb_total(self) -> jax.Array:  # (3,)
+        return self.emb_cf.sum(-1)
+
+    @property
+    def energy_j(self) -> jax.Array:
+        """(3,) operational energy per target — ``evaluate_energy`` without
+        the extra sweep (op_unit already is energy / J_PER_KWH)."""
+        return self.op_unit.sum(-1) * J_PER_KWH
+
+
+def energy_factors(w: Workload, infra: InfraParams, interference: jax.Array,
+                   net_slowdown: jax.Array) -> EnergyFactors:
+    """One Table-1 evaluation at unit CI: everything CI-dependent downstream
+    is an einsum against ``op_unit``. Interference / net_slowdown (the
+    runtime-variance state) shape the times exactly as in ``evaluate``."""
+    unit_env = Environment(
+        ci=jnp.ones((N_COMPONENTS,), jnp.float32),
+        interference=jnp.asarray(interference, jnp.float32),
+        net_slowdown=jnp.asarray(net_slowdown, jnp.float32))
+    b = evaluate(w, infra, unit_env)
+    return EnergyFactors(op_unit=b.op_cf, emb_cf=b.emb_cf,
+                         latency=b.latency, t_comm=b.t_comm)
+
+
+#: (N,)-batched factorization — ONE evaluation for the whole stream; every
+#: (region, tier, hour) candidate score downstream is einsum + mask.
+energy_factors_batch = jax.vmap(energy_factors, in_axes=(0, None, None, None))
+
+
+def total_cf_from_factors(f: EnergyFactors, ci: jax.Array) -> jax.Array:
+    """(N, 3) total CF rows under per-request CI rows ``ci`` (N, 5) — the
+    einsum replacing a full ``evaluate`` sweep per candidate region/hour."""
+    return jnp.einsum("ntc,nc->nt", f.op_unit, ci) + f.emb_cf.sum(-1)
+
+
+def qos_feasible_from_factors(f: EnergyFactors, w: Workload,
+                              extra_latency: jax.Array | float = 0.0
+                              ) -> jax.Array:
+    """(N, 3) QoS feasibility from batched factors (+ optional WAN hop)."""
+    extra = jnp.broadcast_to(jnp.asarray(extra_latency, jnp.float32),
+                             (w.flops.shape[0],))
+    return jax.vmap(qos_feasible)(f.latency, f.t_comm, w, extra[:, None])
+
+
+#: (N, 3) fps-sustain feasibility over batched factors (CI- and hop-free).
+stream_feasible_batch = jax.vmap(stream_feasible)
+
+
+def route_many_from_factors(f: EnergyFactors, w: Workload, ci: jax.Array,
+                            avail: jax.Array) -> RouteOutputs:
+    """``route_many_envs`` semantics rebuilt from precomputed factors + the
+    per-request home CI rows — no Table-1 re-evaluation. Scores agree with
+    the sweep to fp32 tolerance; pick/fallback semantics are identical
+    (``pick_target`` is shared)."""
+    total_cf = total_cf_from_factors(f, ci)
+    ok = qos_feasible_from_factors(f, w) & avail
+    energy = f.energy_j
+    pick = jax.vmap(pick_target)
+    return RouteOutputs(
+        target=pick(total_cf, ok, total_cf, avail),
+        target_latency=pick(f.latency, ok, total_cf, avail),
+        target_energy=pick(energy, ok, total_cf, avail),
+        total_cf=total_cf,
+        latency=f.latency,
+        ok=ok,
+    )
 
 
 def optimal_targets_all_metrics(

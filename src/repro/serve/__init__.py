@@ -1,5 +1,5 @@
 """Serving: batched engine, GreenScale routers, pluggable routing policies,
-and the geo-temporal placement layer."""
+the geo-temporal placement layer, and the temporal deferral engine."""
 
 from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
 from repro.serve.engine import ServeEngine
@@ -8,6 +8,7 @@ from repro.serve.placement import (
     PlacementState,
     windowed_segment_ranks,
 )
+from repro.serve.temporal import TemporalPolicy, TemporalState
 from repro.serve.policy import (
     CapacityLimiter,
     CapacityState,

@@ -33,6 +33,17 @@ finite-score pair is at cap is shed — it keeps a nominal placement (its
 first-choice pair) but consumes no cap; a request with no finite-score
 pair at all (e.g. all-False availability) bypasses capacity accounting and
 takes the uncapped degenerate fallback on its *home* region.
+
+Two admission programs share the segment-rank core: tier-only mode keeps
+the PR-2-parity 3-round preference march (bit-for-bit CapacityLimiter
+decisions), while cross-region mode runs *skip-full best-open attempts*
+under a ``lax.while_loop`` — each round every unplaced request targets its
+best candidate whose cell still has budget via a masked argmin (no
+(N, pairs) argsort), a rejected request's cell is provably full afterwards,
+and the loop ends only when every unplaced routable request is out of open
+cells — exhaustive shed semantics at a fraction of the fixed-round cost
+(pinned >=3x placement-path speedup in ``benchmarks/policy_throughput.py``
+together with the factorized evaluator below).
 """
 
 from __future__ import annotations
@@ -44,8 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import carbon_model
 from repro.core.carbon_intensity import CarbonGrid
-from repro.core.carbon_model import Environment
+from repro.core.carbon_model import EnergyFactors, Environment
 from repro.core.constants import N_TARGETS
 from repro.serve.policy import RoutingPolicy, scores_with_reuse
 
@@ -143,6 +155,12 @@ class PlacementPolicy(RoutingPolicy):
     caps: Any  # array-like (R, 3); jnp.inf = uncapped
     grid: CarbonGrid | None = None
     n_windows: int = 24
+    #: score candidate regions via the factorized einsum evaluator when the
+    #: inner policy supports it (``scores_from_factors``) — one Table-1
+    #: evaluation per batch instead of one sweep per candidate region.
+    #: False forces the legacy per-region sweep (the PR-3 program), kept as
+    #: the numerics reference and the benchmark baseline.
+    factorized: bool = True
 
     def __post_init__(self):
         self._caps = jnp.asarray(self.caps, jnp.float32)
@@ -150,6 +168,8 @@ class PlacementPolicy(RoutingPolicy):
             raise ValueError(f"caps must be (n_regions, {N_TARGETS}), got "
                              f"{self._caps.shape}")
         self.name = f"placed-{self.inner.name}"
+        self._factorizable = (self.factorized
+                              and hasattr(self.inner, "scores_from_factors"))
         if self.grid is not None:
             self._check_grid(self.grid)
 
@@ -157,9 +177,9 @@ class PlacementPolicy(RoutingPolicy):
         if grid.n_regions != self._caps.shape[0]:
             raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
                              f"grid has {grid.n_regions}")
-        # Spill rounds needed: a request has at most (adjacent regions x
-        # feasible tiers) finite pairs, so rounds beyond that never admit.
         adjacency = np.asarray(grid.adjacency)
+        # Legacy-path spill rounds: a request has at most (adjacent regions
+        # x feasible tiers) finite pairs, so rounds beyond that never admit.
         self._n_rounds = int(adjacency.sum(axis=1).max()) * N_TARGETS
         # Identity adjacency = tier-only spill: score ONE region per request
         # (its home), run exactly CapacityLimiter's 3 rounds, and tell the
@@ -176,6 +196,22 @@ class PlacementPolicy(RoutingPolicy):
         # stream-order priority among competitors from different homes.
         self.stream_order_key = ("window_region" if self._diag_only
                                  else "window")
+        self._has_rtt = bool(np.asarray(grid.rtt_s).any())
+        # The legacy per-region sweep scores through ``inner.scores``, which
+        # has no seam for the WAN-hop latency — only the factorized path
+        # models rtt_s in the QoS check.
+        if not self._diag_only and not self._factorizable and self._has_rtt:
+            raise ValueError(
+                "grid has a non-zero rtt_s but the inner policy offers no "
+                "scores_from_factors (or factorized=False) — the WAN-hop "
+                "QoS check needs the factorized evaluator")
+
+    @property
+    def wants_factors(self) -> bool:
+        """Ask the fleet router for a precomputed ``EnergyFactors`` batch.
+        Tier-only (identity-adjacency) placement never needs it — it reuses
+        the router's own Table-1 evaluation via the ``outputs`` hint."""
+        return self._factorizable and not getattr(self, "_diag_only", True)
 
     def bind_grid(self, grid: CarbonGrid) -> None:
         """Adopt the fleet's grid — or, when one was set explicitly, verify
@@ -189,7 +225,7 @@ class PlacementPolicy(RoutingPolicy):
         if self.grid is grid:
             return
         for field in ("ci_hourly", "ci_mobile", "ci_core", "pue",
-                      "adjacency", "latency_penalty"):
+                      "adjacency", "latency_penalty", "rtt_s"):
             if not np.array_equal(np.asarray(getattr(self.grid, field)),
                                   np.asarray(getattr(grid, field))):
                 raise ValueError(
@@ -242,6 +278,13 @@ class PlacementPolicy(RoutingPolicy):
             return self.inner.scores(w, env_r, avail, hour=hour)
 
         s = jnp.moveaxis(jax.vmap(one_region)(ci_all), 0, 1)  # (N, R, 3)
+        return self._mask_pairs(s, home)
+
+    def _mask_pairs(self, s: jax.Array, home: jax.Array) -> jax.Array:
+        """Apply the placement structure to raw (N, R, 3) candidate scores:
+        home->candidate latency penalty, +inf where not adjacent, and the
+        structural exclusion of remote (region', MOBILE) pairs (the phone
+        only exists at home)."""
         pen = self.grid.latency_penalty[home]  # (N, R)
         adj = self.grid.adjacency[home]  # (N, R)
         n_regions = self._caps.shape[0]
@@ -250,36 +293,64 @@ class PlacementPolicy(RoutingPolicy):
         allowed = adj[:, :, None] & ~(remote[:, :, None] & mobile)
         return jnp.where(allowed, s * pen[:, :, None], jnp.inf)
 
-    def decide(self, w, env, avail, state, *, region=None, hour=None,
-               outputs=None, order=None, inv_order=None):
-        n = w.flops.shape[0]
-        n_regions, n_pairs = self._caps.shape[0], self._caps.size
-        if n == 0:
-            return jnp.zeros((0,), jnp.int32), state
-        home = (jnp.zeros((n,), jnp.int32) if region is None
-                else jnp.asarray(region, jnp.int32))
-        hr = (jnp.zeros((n,), jnp.int32) if hour is None
-              else jnp.asarray(hour, jnp.int32))
-        win = hr % self.n_windows
+    def pair_scores_from_factors(self, factors: EnergyFactors, w, env, avail,
+                                 home: jax.Array, hour: jax.Array
+                                 ) -> jax.Array:
+        """``pair_scores`` on the factorized evaluator: the inner policy's
+        einsum scorer under every candidate region's CI row (mixed with the
+        home [mobile, edge_net] components, exactly like the sweep) — no
+        Table-1 re-evaluation per region — plus the WAN-hop
+        ``grid.rtt_s[home, r']`` in each candidate's QoS latency check
+        (skipped statically when the grid has no rtt_s anywhere)."""
+        table = self.grid.table  # (R, 24, 5)
+        ci_dc = table[..., 2:][:, hour % 24, :]  # (R, N, 3): relocating CI
+        home_ci = env.ci  # (N, 5)
+        extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
+        s = self._inner_pair_scores(factors, w, home_ci, ci_dc, avail,
+                                    extra)  # (R, N, 3)
+        return self._mask_pairs(jnp.moveaxis(s, 0, 1), home)
 
-        if self._diag_only:
-            # Tier-only spill: the home region is the only candidate. The
-            # diagonal latency penalty scales a request's whole row by one
-            # positive factor, which never reorders it — skip the multiply
-            # so the scores stay bit-identical to CapacityLimiter's.
-            s = scores_with_reuse(self.inner, w, env, avail, hour,
-                                  outputs)  # (N, 3)
-            n_rounds = N_TARGETS
-        else:
-            s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
-            n_rounds = self._n_rounds
+    def _inner_pair_scores(self, factors, w, home_ci, cand_ci_dc, avail,
+                           extra) -> jax.Array:
+        """(R, N, 3) candidate scores via the inner policy's vectorized
+        ``pair_scores_from_factors`` when it has one, else a vmap of its
+        per-region ``scores_from_factors``. ``cand_ci_dc`` carries only the
+        relocating [edge_dc, core_net, hyper_dc] CI components."""
+        vectorized = getattr(self.inner, "pair_scores_from_factors", None)
+        if vectorized is not None:
+            return vectorized(factors, w, home_ci, cand_ci_dc, avail,
+                              extra_latency=extra)
 
-        # --- to segment-sorted stream order (everything below runs there) -
-        # Admission segments: (window, home) cells of width 3 in tier-only
-        # mode — all of a request's candidate cells live in its own segment
-        # — or window cells of width R*3 with cross-region spill. Either
-        # way the flat cell id is win * n_pairs + region * 3 + tier, so
-        # ``used`` / ``caps`` indexing is identical in both modes.
+        def one_region(ci_rows, ex):
+            ci_mixed = jnp.concatenate([home_ci[:, :2], ci_rows], axis=1)
+            return self.inner.scores_from_factors(factors, w, ci_mixed,
+                                                  avail, extra_latency=ex)
+
+        if extra is None:
+            extra = jnp.zeros((cand_ci_dc.shape[0], home_ci.shape[0]),
+                              jnp.float32)
+        return jax.vmap(one_region)(cand_ci_dc, extra)
+
+    def _use_factors(self, factors) -> bool:
+        """Can this decide() call run the factorized program? Needs an
+        inner-policy einsum scorer plus either router-provided factors or
+        an ``inner.infra`` to compute them from."""
+        return self._factorizable and (factors is not None
+                                       or hasattr(self.inner, "infra"))
+
+    def _cross_scores_factorized(self, factors, w, env, avail, home, hr):
+        """(N, R, 3) candidate-pair scores on the einsum evaluator,
+        computing factors here if the router didn't pass them."""
+        if factors is None:
+            factors = carbon_model.energy_factors_batch(
+                w, self.inner.infra, env.interference, env.net_slowdown)
+        return self.pair_scores_from_factors(factors, w, env, avail,
+                                             home, hr)
+
+    def _to_stream_order(self, n, win, home, order, inv_order):
+        """Resolve the host-provided stream-order hint (or fall back to an
+        in-jit argsort) and its inverse permutation."""
+        n_regions = self._caps.shape[0]
         if order is None:  # no host-provided hint (e.g. GreenScaleRouter)
             order = jnp.argsort(
                 win * n_regions + home if self._diag_only else win)
@@ -292,26 +363,58 @@ class PlacementPolicy(RoutingPolicy):
                 jnp.arange(n, dtype=jnp.int32))
         else:
             inv = jnp.asarray(inv_order, jnp.int32)
+        return order, inv
+
+    def decide(self, w, env, avail, state, *, region=None, hour=None,
+               outputs=None, order=None, inv_order=None, slack=None,
+               factors=None):
+        n = w.flops.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        if n == 0:
+            return jnp.zeros((0,), jnp.int32), state
+        home = (jnp.zeros((n,), jnp.int32) if region is None
+                else jnp.asarray(region, jnp.int32))
+        hr = (jnp.zeros((n,), jnp.int32) if hour is None
+              else jnp.asarray(hour, jnp.int32))
+        win = hr % self.n_windows
+        order, inv = self._to_stream_order(n, win, home, order, inv_order)
+
+        if self._diag_only:
+            # Tier-only spill: the home region is the only candidate. The
+            # diagonal latency penalty scales a request's whole row by one
+            # positive factor, which never reorders it — skip the multiply
+            # so the scores stay bit-identical to CapacityLimiter's.
+            s = scores_with_reuse(self.inner, w, env, avail, hour,
+                                  outputs)  # (N, 3)
+            return self._decide_diag(s, win, home, order, inv, state)
+        if self._use_factors(factors):
+            s = self._cross_scores_factorized(
+                factors, w, env, avail, home, hr).reshape(n, n_pairs)
+            return self._decide_cross(s, win, home, order, inv, state)
+        # non-factorizable inner policy: the verbatim PR-3 program (one
+        # Table-1 sweep per candidate region, fixed-round admission)
+        s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
+        return self._decide_cross_legacy(s, win, home, order, inv, state)
+
+    def _decide_diag(self, s, win, home, order, inv, state):
+        """Tier-only admission: the PR-2/PR-3 segment-rank program,
+        unchanged — 3 unrolled spill rounds marching each request down its
+        preference list, bit-for-bit CapacityLimiter parity."""
+        n = s.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        # Admission segments: (window, home) cells of width 3 — all of a
+        # request's candidate cells live in its own segment. The flat cell
+        # id is win * n_pairs + home * 3 + tier, so ``used`` / ``caps``
+        # indexing matches the cross-region mode.
         win_s, home_s, s_s = win[order], home[order], s[order]
-        # Best-first preference; stable argsort breaks score ties by column
-        # index (tier order in diag mode; region-major, tier-minor over flat
-        # pairs otherwise, matching CapacityLimiter's tier order per region).
+        # Best-first preference; stable argsort breaks score ties by tier
+        # index, matching CapacityLimiter's tier order.
         pref_s = jnp.argsort(s_s, axis=1).astype(jnp.int32)
         valid_s = jnp.isfinite(jnp.take_along_axis(s_s, pref_s, axis=1))
-        if self._diag_only:
-            home_row_s = s_s  # (N, 3)
-            width = N_TARGETS
-            seg_s = win_s * n_regions + home_s
-            n_segments = self.n_windows * n_regions
-            col_base_s = home_s * N_TARGETS  # pref_s columns are tiers
-        else:
-            home_row_s = jnp.take_along_axis(
-                s_s.reshape(n, n_regions, N_TARGETS),
-                home_s[:, None, None], axis=1)[:, 0]  # (N, 3)
-            width = n_pairs
-            seg_s = win_s
-            n_segments = self.n_windows
-            col_base_s = jnp.zeros((n,), jnp.int32)  # columns are flat pairs
+        width = N_TARGETS
+        seg_s = win_s * n_regions + home_s
+        n_segments = self.n_windows * n_regions
+        col_base_s = home_s * N_TARGETS  # pref_s columns are tiers
         starts = jnp.searchsorted(seg_s, jnp.arange(n_segments))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
         caps_flat = self._caps.reshape(-1)
@@ -320,7 +423,7 @@ class PlacementPolicy(RoutingPolicy):
         used = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
         placed = jnp.zeros((n,), bool)
         exec_pair = jnp.zeros((n,), jnp.int32)
-        for k in range(min(n_rounds, pref_s.shape[1])):
+        for k in range(N_TARGETS):
             choice = pref_s[:, k]
             active = valid_s[:, k] & ~placed
             col = col_base_s + choice  # flat (region, tier) pair
@@ -346,19 +449,12 @@ class PlacementPolicy(RoutingPolicy):
         # is MOBILE, matching the uncapped router).
         shed_s = valid_s[:, 0] & ~placed
         first_col_s = col_base_s + pref_s[:, 0]  # first-choice flat pair
-        fb_pair = jnp.where(
-            valid_s[:, 0], first_col_s,
-            home_s * N_TARGETS + jnp.argmin(
-                home_row_s, axis=1).astype(jnp.int32))
+        fb_pair = jnp.where(valid_s[:, 0], first_col_s,
+                            col_base_s + jnp.argmin(
+                                s_s, axis=1).astype(jnp.int32))
         exec_pair = jnp.where(placed, exec_pair, fb_pair)
 
-        # --- back to stream order + aggregates ----------------------------
         shed = shed_s[inv]
-        # a shed request executes nowhere — report its HOME region (its
-        # nominal target tier keeps the first-choice pair's tier)
-        exec_region = (None if self._diag_only
-                       else jnp.where(shed_s, home_s,
-                                      exec_pair // N_TARGETS)[inv])
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
         counts = used.reshape(
             self.n_windows, n_regions, N_TARGETS).sum(axis=0)
@@ -368,5 +464,145 @@ class PlacementPolicy(RoutingPolicy):
         return targets, PlacementState(
             counts=state.counts + counts.astype(jnp.int32),
             shed=shed,
+            # tier-only spill never leaves home: the None sentinel lets the
+            # router skip the executed-region accounting entirely
+            exec_region=None,
+            shed_pair=state.shed_pair + shed_pair)
+
+    def _decide_cross(self, s, win, home, order, inv, state):
+        """Cross-region admission: skip-full best-open attempts under a
+        ``lax.while_loop``. Each round every unplaced request targets its
+        best candidate whose cell still has budget (a masked argmin — no
+        (N, pairs) argsort anywhere) and competes by stream order. A
+        rejected request's cell is provably full afterwards (the round
+        admits exactly the remaining budget), so every round retires at
+        least one cell per rejected request and the loop terminates with
+        the exact shed semantics — a routable request is shed iff every
+        finite-score cell is at cap — without a fixed round count. Priority
+        is (attempt round, stream order within the window)."""
+        n = s.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        win_s, home_s, s_s = win[order], home[order], s[order]
+        finite_s = jnp.isfinite(s_s)  # (N, pairs)
+        routable = finite_s.any(axis=1)
+        # ties break by column index (region-major, tier-minor), matching
+        # the stable-argsort preference of the tier-only mode
+        first_col = jnp.argmin(s_s, axis=1).astype(jnp.int32)
+        seg_s = win_s
+        starts = jnp.searchsorted(seg_s, jnp.arange(self.n_windows))
+        ends = jnp.concatenate([starts[1:], jnp.array([n])])
+        caps_flat = self._caps.reshape(-1)
+        caps_cell = jnp.tile(caps_flat, self.n_windows)
+        limit = self.n_windows * n_pairs + 1  # closable cells + 1
+
+        def open_mask(used, placed):
+            """(N, pairs) — open-celled finite candidates of unplaced rows.
+            Its any() is the loop condition: empty means every unplaced
+            routable row is out of open cells, i.e. shed."""
+            open_w = (jnp.floor(caps_cell - used) >= 1.0).reshape(
+                self.n_windows, n_pairs)
+            return open_w[win_s] & finite_s & ~placed[:, None]
+
+        def cond(carry):
+            mask, _, _, _, k = carry
+            return mask.any() & (k < limit)
+
+        def body(carry):
+            mask, used, placed, exec_pair, k = carry
+            active = mask.any(axis=1)
+            choice = jnp.argmin(jnp.where(mask, s_s, jnp.inf),
+                                axis=1).astype(jnp.int32)
+            cell = seg_s * n_pairs + choice
+            rank, totals = windowed_segment_ranks(
+                choice, active, cell, starts, ends, n_pairs)
+            fits = active & (used[cell] + rank + 1.0 <= caps_flat[choice])
+            exec_pair = jnp.where(fits, choice, exec_pair)
+            placed = placed | fits
+            used = used + jnp.minimum(
+                jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals)
+            # rejected rows lost their target cell (now full); the carried
+            # next-round mask either re-aims them or retires them
+            return open_mask(used, placed), used, placed, exec_pair, k + 1
+
+        used0 = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        placed0 = jnp.zeros((n,), bool)
+        _, used, placed, exec_pair, _ = jax.lax.while_loop(
+            cond, body,
+            (open_mask(used0, placed0), used0, placed0,
+             jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)))
+        return self._finalize_cross(s_s, home_s, routable, first_col,
+                                    placed, exec_pair, used, inv, state)
+
+    def _finalize_cross(self, s_s, home_s, routable, first_col, placed,
+                        exec_pair, used, inv, state):
+        """Shared shed/fallback + back-to-stream-order tail of both
+        cross-region admission programs. Only *routable* leftovers are
+        capacity-shed; their nominal placement is the first-choice pair. A
+        request with no finite-score pair at all was never a capacity
+        decision — it takes the uncapped degenerate fallback on its HOME
+        region (argmin of an all-inf row is MOBILE, matching the uncapped
+        router)."""
+        n = s_s.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        shed_s = routable & ~placed
+        home_row_s = jnp.take_along_axis(
+            s_s.reshape(n, n_regions, N_TARGETS),
+            home_s[:, None, None], axis=1)[:, 0]  # (N, 3)
+        fb_pair = jnp.where(routable, first_col,
+                            home_s * N_TARGETS + jnp.argmin(
+                                home_row_s, axis=1).astype(jnp.int32))
+        exec_pair = jnp.where(placed, exec_pair, fb_pair)
+
+        # --- back to stream order + aggregates ----------------------------
+        shed = shed_s[inv]
+        # a shed request executes nowhere — report its HOME region (its
+        # nominal target tier keeps the first-choice pair's tier)
+        exec_region = jnp.where(shed_s, home_s,
+                                exec_pair // N_TARGETS)[inv]
+        targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
+        counts = used.reshape(
+            self.n_windows, n_regions, N_TARGETS).sum(axis=0)
+        shed_pair = (jax.nn.one_hot(first_col, n_pairs, dtype=jnp.int32)
+                     * shed_s[:, None]).sum(axis=0).reshape(
+            n_regions, N_TARGETS)
+        return targets, PlacementState(
+            counts=state.counts + counts.astype(jnp.int32),
+            shed=shed,
             exec_region=exec_region,
             shed_pair=state.shed_pair + shed_pair)
+
+    def _decide_cross_legacy(self, s, win, home, order, inv, state):
+        """The PR-3 cross-region admission, kept verbatim for inner
+        policies without a factorized scorer (and as the benchmark's
+        baseline program): best-first preference via a stable (N, pairs)
+        argsort, then ``adjacency degree x 3`` fixed spill rounds marching
+        each request down its preference list. Priority (spill round,
+        stream order); same shed/fallback semantics as ``_decide_cross``."""
+        n = s.shape[0]
+        n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        win_s, home_s, s_s = win[order], home[order], s[order]
+        pref_s = jnp.argsort(s_s, axis=1).astype(jnp.int32)
+        valid_s = jnp.isfinite(jnp.take_along_axis(s_s, pref_s, axis=1))
+        seg_s = win_s
+        starts = jnp.searchsorted(seg_s, jnp.arange(self.n_windows))
+        ends = jnp.concatenate([starts[1:], jnp.array([n])])
+        caps_flat = self._caps.reshape(-1)
+        caps_cell = jnp.tile(caps_flat, self.n_windows)
+
+        used = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        placed = jnp.zeros((n,), bool)
+        exec_pair = jnp.zeros((n,), jnp.int32)
+        for k in range(min(self._n_rounds, n_pairs)):
+            choice = pref_s[:, k]
+            active = valid_s[:, k] & ~placed
+            cell = seg_s * n_pairs + choice
+            rank, totals = windowed_segment_ranks(
+                choice, active, cell, starts, ends, n_pairs)
+            fits = active & (used[cell] + rank + 1.0 <= caps_flat[choice])
+            exec_pair = jnp.where(fits, choice, exec_pair)
+            placed = placed | fits
+            used = used + jnp.minimum(
+                jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals)
+
+        return self._finalize_cross(s_s, home_s, valid_s[:, 0], pref_s[:, 0],
+                                    placed, exec_pair, used, inv, state)

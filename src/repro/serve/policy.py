@@ -27,7 +27,8 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       over a row IS the policy's decision for that request, which is what
       lets wrappers like ``CapacityLimiter`` re-rank and spill.
   ``decide(w, env, avail, state, *, region=None, hour=None, outputs=None,
-      order=None) -> (targets, new_state)``
+      order=None, inv_order=None, slack=None, factors=None)
+      -> (targets, new_state)``
       the decision entry point. ``state`` is a policy-owned pytree threaded
       through the call (capacity counters, ...); stateless policies pass it
       through. ``outputs`` is an optional precomputed
@@ -40,7 +41,13 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       the policy sets ``stream_order_key = "window_region"``), precomputed
       on the host by the fleet router (a numpy radix sort) so windowed
       policies (``PlacementPolicy``) skip an O(N log N) device sort;
-      policies that don't window ignore them.
+      policies that don't window ignore them. ``slack`` is the per-request
+      deferral allowance in hours ((N,) int32; None = nothing may defer) —
+      only temporal policies consume it. ``factors`` is an optional
+      precomputed ``carbon_model.EnergyFactors`` batch (the router computes
+      it once for policies that set ``wants_factors = True``) from which
+      CI-linear policies score every candidate (region, tier, hour) as an
+      einsum instead of one Table-1 sweep per candidate region.
   ``initial_state(n_regions, n_requests) -> pytree``
       the state to thread into the first ``decide``.
 """
@@ -105,7 +112,9 @@ class RoutingPolicy(abc.ABC):
                hour: jax.Array | None = None,
                outputs: RouteOutputs | None = None,
                order: jax.Array | None = None,
-               inv_order: jax.Array | None = None
+               inv_order: jax.Array | None = None,
+               slack: jax.Array | None = None,
+               factors: Any | None = None
                ) -> tuple[jax.Array, Any]:
         s = self.scores(w, env, avail, hour=hour)
         return jnp.argmin(s, axis=-1).astype(jnp.int32), state
@@ -176,8 +185,92 @@ class OraclePolicy(RoutingPolicy):
                          jnp.where(out.ok, score, jnp.inf),
                          jnp.where(avail, out.total_cf, jnp.inf))
 
+    def scores_from_factors(self, factors, w: Workload, ci: jax.Array,
+                            avail: jax.Array,
+                            extra_latency: jax.Array | float = 0.0
+                            ) -> jax.Array:
+        """``scores`` under arbitrary per-request CI rows ``ci`` (N, 5),
+        rebuilt from a precomputed ``carbon_model.EnergyFactors`` batch — the
+        einsum path placement/temporal policies use to score every candidate
+        (region, hour) without a Table-1 sweep per candidate. Supports all
+        three metrics (unlike ``scores_from_outputs``). ``extra_latency``
+        ((N,) or scalar, seconds) is the WAN hop of a remote candidate: it
+        tightens the QoS feasibility mask and adds to the latency-metric
+        score; 0.0 reproduces the home-region scores to fp32 tolerance.
+
+        Fallback semantics: a request with no feasible tier even WITHOUT
+        the hop keeps the legacy degenerate fallback (carbon over available
+        tiers — it must run somewhere, the hop changes nothing). But a
+        candidate that is infeasible purely BECAUSE of the hop is refused
+        outright (all +inf): a tight-budget request never trades its QoS
+        constraint for a greener remote region."""
+        total_cf = carbon_model.total_cf_from_factors(factors, ci)
+        ok_base = carbon_model.qos_feasible_from_factors(factors, w) & avail
+        ok = carbon_model.qos_feasible_from_factors(
+            factors, w, extra_latency) & avail
+        extra = jnp.asarray(extra_latency, jnp.float32)
+        if self.metric == "carbon":
+            score = total_cf
+        elif self.metric == "latency":
+            score = factors.latency + jnp.broadcast_to(
+                extra.reshape(-1, 1) if extra.ndim else extra,
+                factors.latency.shape)
+        else:  # energy — CI- and hop-free
+            score = factors.energy_j
+        return jnp.where(
+            jnp.any(ok, axis=-1, keepdims=True),
+            jnp.where(ok, score, jnp.inf),
+            jnp.where(jnp.any(ok_base, axis=-1, keepdims=True),
+                      jnp.inf,
+                      jnp.where(avail, total_cf, jnp.inf)))
+
+    def pair_scores_from_factors(self, factors, w: Workload,
+                                 home_ci: jax.Array, cand_ci_dc: jax.Array,
+                                 avail: jax.Array,
+                                 extra_latency: jax.Array | None = None
+                                 ) -> jax.Array:
+        """(R, N, 3) ``scores_from_factors`` vectorized over candidate
+        regions — the placement/temporal hot path. ``home_ci`` (N, 5) bills
+        the [mobile, edge_net] components at the home region;
+        ``cand_ci_dc`` (R, N, 3) holds ONLY the relocating
+        [edge_dc, core_net, hyper_dc] CI components of each candidate
+        (callers gather just those three table columns). One einsum pair +
+        ONE QoS evaluation replace R per-region score calls (and, with
+        ``extra_latency=None`` — no WAN hop anywhere — the hop-gating
+        collapses away statically). Fallback semantics per candidate match
+        ``scores_from_factors``."""
+        hp = jnp.einsum("ntc,nc->nt", factors.op_unit[..., :2],
+                        home_ci[..., :2])  # (N, 3)
+        cp = jnp.einsum("ntc,rnc->rnt", factors.op_unit[..., 2:],
+                        cand_ci_dc)  # (R, N, 3)
+        total_cf = hp[None] + cp + factors.emb_cf.sum(-1)[None]
+        ok_base = carbon_model.qos_feasible_from_factors(factors, w) & avail
+        any_base = jnp.any(ok_base, axis=-1, keepdims=True)  # (N, 1)
+        if extra_latency is None:
+            ok = ok_base[None]
+            lat = factors.latency[None]
+        else:
+            extra = jnp.asarray(extra_latency, jnp.float32)  # (R, N)
+            lat = factors.latency[None] + extra[:, :, None]
+            ok = ((lat <= w.latency_req[None, :, None])
+                  & carbon_model.stream_feasible_batch(factors.t_comm,
+                                                       w)[None]
+                  & avail[None])
+        if self.metric == "carbon":
+            score = total_cf
+        elif self.metric == "latency":
+            score = jnp.broadcast_to(lat, total_cf.shape)
+        else:  # energy — CI- and hop-free
+            score = jnp.broadcast_to(factors.energy_j[None], total_cf.shape)
+        return jnp.where(
+            jnp.any(ok, axis=-1, keepdims=True),
+            jnp.where(ok, score, jnp.inf),
+            jnp.where(any_base[None], jnp.inf,
+                      jnp.where(avail[None], total_cf, jnp.inf)))
+
     def decide(self, w, env, avail, state, *, region=None, hour=None,
-               outputs=None, order=None, inv_order=None):
+               outputs=None, order=None, inv_order=None, slack=None,
+               factors=None):
         out = outputs if outputs is not None else \
             carbon_model.route_many_envs(w, self.infra, env, avail)
         t = {"carbon": out.target, "latency": out.target_latency,
@@ -345,7 +438,8 @@ class CapacityLimiter(RoutingPolicy):
         return self.inner.scores(w, env, avail, hour=hour)
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
-               outputs=None, order=None, inv_order=None):
+               outputs=None, order=None, inv_order=None, slack=None,
+               factors=None):
         n = w.flops.shape[0]
         n_cols = self._caps.size
         region = (jnp.zeros((n,), jnp.int32) if region is None

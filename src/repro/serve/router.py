@@ -59,6 +59,10 @@ class Request:
     bytes_per_token: float = 4.0
     #: which tiers can hold this model at all (e.g. 72B never fits on-device)
     available: tuple[bool, bool, bool] = (True, True, True)
+    #: deferral allowance (hours past arrival the request may still start;
+    #: 0 = interactive, must run on arrival). Only temporal policies
+    #: (``repro.serve.temporal``) consume it.
+    slack_hours: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +89,10 @@ class RequestBatch:
     latency_budget_s: np.ndarray
     bytes_per_token: np.ndarray
     available: np.ndarray  # (N, 3) bool
+    #: (N,) deferral allowance in hours (None = all-interactive, slack 0) —
+    #: the deadline tag temporal policies schedule against: a request may
+    #: execute in any hour of [arrival, arrival + slack].
+    slack_hours: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.prompt_tokens)
@@ -103,7 +111,15 @@ class RequestBatch:
             bytes_per_token=col("bytes_per_token"),
             available=np.array([r.available for r in reqs],
                                bool).reshape(n, 3),
+            slack_hours=col("slack_hours"),
         )
+
+    @property
+    def slack_h(self) -> np.ndarray:
+        """(N,) int32 whole-hour slack (zeros when untagged)."""
+        if self.slack_hours is None:
+            return np.zeros(len(self), np.int32)
+        return np.floor(np.asarray(self.slack_hours)).astype(np.int32)
 
     def workload(self, cfg: ModelConfig) -> Workload:
         """Stacked GreenScale descriptors — elementwise identical to
@@ -235,9 +251,11 @@ class GreenScaleRouter:
                             net_slowdown=env.net_slowdown)
         if hour is not None:
             hour = jnp.broadcast_to(jnp.asarray(hour, jnp.float32), (n,))
+        slack = (None if batch.slack_hours is None
+                 else jnp.asarray(batch.slack_h))
         targets, _ = self.policy.decide(
             w, env_b, batch.avail, self.policy.initial_state(1, n),
-            hour=hour, outputs=out)
+            hour=hour, outputs=out, slack=slack)
         return dataclasses.replace(out, target=jnp.asarray(targets,
                                                            jnp.int32))
 
@@ -282,6 +300,10 @@ class FleetRouteResult:
     exec_region: jax.Array  # (N,) int32 executing region (= home w/o spill)
     spilled_count: jax.Array  # () int32 requests executed off-home (0 w/o
     #                           cross-region placement)
+    deferred_count: jax.Array  # () int32 non-shed requests executed after
+    #                            their arrival hour (0 w/o temporal policy)
+    mean_defer_hours: jax.Array  # () float32 mean defer of the deferred
+    #                              requests (0 when none deferred)
 
     @property
     def saved_vs_latency_g(self) -> jax.Array:
@@ -308,6 +330,11 @@ class FleetRouteResult:
     def spill_rate(self) -> jax.Array:
         """Fraction of the stream executed outside its home region."""
         return self.spilled_count / self.target.shape[0]
+
+    @property
+    def defer_rate(self) -> jax.Array:
+        """Fraction of the stream executed after its arrival hour."""
+        return self.deferred_count / self.target.shape[0]
 
 
 @dataclasses.dataclass
@@ -369,11 +396,20 @@ class FleetRouter:
         n_regions = len(self.regions)
         interference = self._interference
         net_slowdown = self._net_slowdown
+        # Factorized hot path: policies that score candidate (region, hour)
+        # placements via the einsum evaluator (cross-region PlacementPolicy,
+        # TemporalPolicy) get ONE Table-1 evaluation per batch — factors feed
+        # the routing outputs, the policy's candidate scores, AND the
+        # executed-placement accounting (no out_exec re-evaluation). The
+        # default path keeps the sweep program bit-for-bit.
+        use_factors = bool(getattr(self.policy, "wants_factors", False))
+        rtt_s = self.grid.rtt_s
 
         @jax.jit
         def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
                          hour: jax.Array, ci_table: jax.Array, state,
-                         order: jax.Array, inv_order: jax.Array
+                         order: jax.Array, inv_order: jax.Array,
+                         slack: jax.Array
                          ) -> tuple[FleetRouteResult, object]:
             env = Environment(ci=ci_table[region, hour],  # (N, 5)
                               interference=interference,
@@ -382,22 +418,56 @@ class FleetRouter:
             # three reference objectives; the policy makes the decision
             # (oracle-family policies reuse ``out`` via the outputs hint, so
             # the default path is the pre-policy program, bit-for-bit).
-            out = carbon_model.route_many_envs(w, infra, env, avail)
+            if use_factors:
+                factors = carbon_model.energy_factors_batch(
+                    w, infra, interference, net_slowdown)
+                out = carbon_model.route_many_from_factors(
+                    factors, w, env.ci, avail)
+            else:
+                factors = None
+                out = carbon_model.route_many_envs(w, infra, env, avail)
             targets, new_state = policy.decide(
                 w, env, avail, state, region=region, hour=hour, outputs=out,
-                order=order, inv_order=inv_order)
+                order=order, inv_order=inv_order, slack=slack,
+                factors=factors)
             shed = getattr(new_state, "shed", None)
             exec_region = getattr(new_state, "exec_region", None)
+            exec_hour = getattr(new_state, "exec_hour", None)
             take = lambda o, t: jnp.take_along_axis(
                 o.total_cf, t[:, None], axis=1)[:, 0]
-            if exec_region is None:
-                # no cross-region placement: execute where you arrived
+            take2 = lambda a, t: jnp.take_along_axis(
+                a, t[:, None], axis=1)[:, 0]
+            if exec_region is None and exec_hour is None:
+                # no cross-region / deferred placement: execute on arrival
                 exec_region = region
                 spilled = jnp.zeros((), jnp.int32)
                 carbon = take(out, targets)
-                feas = jnp.take_along_axis(out.ok, targets[:, None],
-                                           axis=1)[:, 0]
+                feas = take2(out.ok, targets)
+            elif factors is not None:
+                # executed-placement accounting on the factorized evaluator:
+                # CI rows gathered at the EXECUTING (region, hour) — home
+                # [mobile, edge_net] components stay billed in the home
+                # region at the execution hour (the device draws energy when
+                # the work actually runs), the WAN hop enters the QoS check
+                # — and the precomputed factors turn them into carbon with
+                # one einsum instead of the out_exec Table-1 re-evaluation.
+                er = region if exec_region is None else exec_region
+                eh = hour if exec_hour is None else exec_hour
+                exec_region = er
+                ci_exec = jnp.concatenate(
+                    [ci_table[region, eh][:, :2],
+                     ci_table[er, eh][:, 2:]], axis=1)
+                cf_exec = carbon_model.total_cf_from_factors(factors, ci_exec)
+                ok_exec = carbon_model.qos_feasible_from_factors(
+                    factors, w, rtt_s[region, er]) & avail
+                carbon = take2(cf_exec, targets)
+                feas = take2(ok_exec, targets)
+                moved = er != region
+                if shed is not None:
+                    moved = moved & ~shed
+                spilled = moved.sum().astype(jnp.int32)
             else:
+                # legacy sweep path (non-factorizable inner policies):
                 # carbon/QoS accounting under the EXECUTING region's CI for
                 # rows that moved; unmoved rows keep the home-region values
                 # bit-for-bit (adjacency == I parity with tier-only spill).
@@ -420,12 +490,8 @@ class FleetRouter:
                 spilled = moved.sum().astype(jnp.int32)
                 carbon = jnp.where(moved, take(out_exec, targets),
                                    take(out, targets))
-                feas = jnp.where(
-                    moved,
-                    jnp.take_along_axis(out_exec.ok, targets[:, None],
-                                        axis=1)[:, 0],
-                    jnp.take_along_axis(out.ok, targets[:, None],
-                                        axis=1)[:, 0])
+                feas = jnp.where(moved, take2(out_exec.ok, targets),
+                                 take2(out.ok, targets))
             # (region, tier) assignment counts as a one-hot reduction over
             # the flattened pair index — a dense sum, not an N-wide scatter
             pair = exec_region * N_TARGETS + targets
@@ -434,6 +500,17 @@ class FleetRouter:
             if shed is not None:
                 one_hot = one_hot * (~shed)[:, None].astype(jnp.int32)
             counts = one_hot.sum(axis=0).reshape(n_regions, N_TARGETS)
+            defer = getattr(new_state, "defer_hours", None)
+            if defer is None:
+                deferred = jnp.zeros((), jnp.int32)
+                mean_defer = jnp.zeros((), jnp.float32)
+            else:
+                dmask = defer > 0
+                if shed is not None:
+                    dmask = dmask & ~shed
+                deferred = dmask.sum().astype(jnp.int32)
+                mean_defer = ((defer * dmask).sum()
+                              / jnp.maximum(deferred, 1)).astype(jnp.float32)
             return FleetRouteResult(
                 target=targets,
                 carbon_g=carbon,
@@ -450,6 +527,8 @@ class FleetRouter:
                             else shed.sum().astype(jnp.int32)),
                 exec_region=exec_region,
                 spilled_count=spilled,
+                deferred_count=deferred,
+                mean_defer_hours=mean_defer,
             ), new_state
 
         self._fleet_route = _fleet_route
@@ -502,10 +581,11 @@ class FleetRouter:
             order, inv_order = jnp.asarray(order_np), jnp.asarray(inv_np)
         region = jnp.asarray(region_np)
         hour = jnp.asarray(hour_np)
+        slack = jnp.asarray(batch.slack_h)
         state = self.policy.initial_state(len(self.regions), len(batch))
         return self._fleet_route(batch.workload(self.cfg), batch.avail,
                                  region, hour, self._ci_table, state,
-                                 order, inv_order)
+                                 order, inv_order, slack)
 
     def admit_windows(self, res: FleetRouteResult, t_hours: np.ndarray,
                       engine, n_windows: int = 24) -> list[np.ndarray]:

@@ -8,6 +8,8 @@ the example demonstrates.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.serve.router import RequestBatch
@@ -79,3 +81,34 @@ def multi_region_stream(
         t_hours[idx] = diurnal_hours(rng, int(idx.sum()),
                                      peak=float(peak_hours[r]))
     return batch, region, t_hours
+
+
+def deferrable_stream(
+    n: int, n_regions: int, seed: int = 0,
+    batch_frac: float = 0.5,
+    slack_range_h: tuple[int, int] = (6, 16),
+) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
+    """The multi-region skewed stream with a deadline-tagged batch-class
+    slice — the temporal-deferral scenario: a ``batch_frac`` share of the
+    requests (embedding backfills, offline summarization, eval sweeps) may
+    execute in any hour of ``[arrival, arrival + slack]`` with slack drawn
+    uniformly from ``slack_range_h``, and carries a relaxed latency budget
+    (batch work tolerates any tier). Interactive requests keep slack 0, so
+    a zero-``batch_frac`` stream reproduces ``multi_region_stream`` exactly.
+
+    Most arrivals peak in the local evening — exactly when solar-heavy grids
+    are at their dirtiest — so the batch slice's slack window reaches the
+    next midday dip: the joint (region, tier, hour) decision space is where
+    the deferral carbon win lives (CASPER's temporal axis).
+    """
+    batch, region, t_hours = multi_region_stream(n, n_regions, seed=seed)
+    rng = np.random.default_rng(seed + 101)
+    is_batch = rng.random(n) < batch_frac
+    slack = np.where(
+        is_batch, rng.integers(slack_range_h[0], slack_range_h[1] + 1, n),
+        0).astype(np.float64)
+    return (dataclasses.replace(
+        batch,
+        slack_hours=slack,
+        latency_budget_s=np.where(is_batch, 120.0, batch.latency_budget_s)),
+        region, t_hours)

@@ -2,6 +2,7 @@
 
 import hypothesis
 import hypothesis.strategies as st
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -179,3 +180,88 @@ def test_all_paper_workloads_evaluate():
     for info in ALL_PAPER_WORKLOADS:
         b = evaluate(info.workload, INFRA, ENV)
         assert bool(jnp.isfinite(b.total_cf).all()), info.name
+
+
+class TestFactorizedEvaluator:
+    """ISSUE-4 acceptance: operational carbon is linear in CI, so one
+    Table-1 evaluation at unit CI + an einsum against arbitrary CI rows
+    must match the sweep-based evaluation to fp32 tolerance."""
+
+    def _stream(self, n=256, seed=0):
+        rng = np.random.default_rng(seed)
+        from repro.core.workloads import batch_workloads
+
+        w = batch_workloads(
+            flops=rng.uniform(1e8, 1e13, n),
+            mem_bytes=rng.uniform(1e6, 1e10, n),
+            data_in=rng.uniform(1e3, 1e7, n),
+            data_out=rng.uniform(1e3, 1e6, n),
+            latency_req=rng.choice([0.05, 0.5, 2.0, 30.0], n),
+        )
+        ci = rng.uniform(20.0, 700.0, (n, 5)).astype(np.float32)
+        avail = rng.random((n, 3)) < 0.9
+        avail[~avail.any(axis=1)] = True
+        return w, jnp.asarray(ci), jnp.asarray(avail)
+
+    def test_total_cf_matches_sweep_to_fp32_tolerance(self):
+        w, ci, avail = self._stream()
+        interference = jnp.ones((3,), jnp.float32)
+        net_slowdown = jnp.ones((2,), jnp.float32)
+        f = carbon_model.energy_factors_batch(w, INFRA, interference,
+                                              net_slowdown)
+        got = carbon_model.total_cf_from_factors(f, ci)
+        env = Environment(ci=ci, interference=interference,
+                          net_slowdown=net_slowdown)
+        ref = carbon_model.route_many_envs(w, INFRA, env, avail)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref.total_cf),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(f.latency),
+                                   np.asarray(ref.latency), rtol=1e-6)
+
+    def test_route_outputs_from_factors_match_sweep(self):
+        """Same picks (carbon/latency/energy), same feasibility mask."""
+        w, ci, avail = self._stream(seed=3)
+        interference = jnp.asarray([1.1, 1.0, 1.3], jnp.float32)
+        net_slowdown = jnp.asarray([1.2, 1.0], jnp.float32)
+        env = Environment(ci=ci, interference=interference,
+                          net_slowdown=net_slowdown)
+        f = carbon_model.energy_factors_batch(w, INFRA, interference,
+                                              net_slowdown)
+        got = carbon_model.route_many_from_factors(f, w, ci, avail)
+        ref = carbon_model.route_many_envs(w, INFRA, env, avail)
+        np.testing.assert_array_equal(np.asarray(got.ok), np.asarray(ref.ok))
+        np.testing.assert_array_equal(np.asarray(got.target),
+                                      np.asarray(ref.target))
+        np.testing.assert_array_equal(np.asarray(got.target_latency),
+                                      np.asarray(ref.target_latency))
+        np.testing.assert_array_equal(np.asarray(got.target_energy),
+                                      np.asarray(ref.target_energy))
+        np.testing.assert_allclose(np.asarray(got.total_cf),
+                                   np.asarray(ref.total_cf), rtol=1e-5)
+
+    def test_energy_j_matches_evaluate_energy(self):
+        w, _, _ = self._stream(seed=5)
+        interference = jnp.ones((3,), jnp.float32)
+        net_slowdown = jnp.ones((2,), jnp.float32)
+        f = carbon_model.energy_factors_batch(w, INFRA, interference,
+                                              net_slowdown)
+        env = Environment.make(300.0, 350.0, 280.0, 320.0)
+        ref = jax.vmap(evaluate_energy, in_axes=(0, None, None))(w, INFRA,
+                                                                 env)
+        np.testing.assert_allclose(np.asarray(f.energy_j), np.asarray(ref),
+                                   rtol=1e-6)
+
+    def test_qos_feasible_with_wan_hop(self):
+        """The extra-latency seam: zero hop reproduces ``feasible`` exactly,
+        and a hop bigger than every budget kills every target (the hop
+        applies uniformly per-target; remote-MOBILE exclusion is structural
+        in the placement layer, not here)."""
+        w = _w(lat=0.1)
+        b = evaluate(w, INFRA, ENV)
+        base = carbon_model.qos_feasible(b.latency, b.t_comm, w)
+        np.testing.assert_array_equal(
+            np.asarray(carbon_model.qos_feasible(b.latency, b.t_comm, w,
+                                                 0.0)),
+            np.asarray(base))
+        hop = carbon_model.qos_feasible(b.latency, b.t_comm, w, 1e9)
+        assert not bool(np.asarray(hop).any())

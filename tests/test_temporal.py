@@ -1,0 +1,472 @@
+"""Temporal deferral engine tests: zero-slack bit-for-bit parity with the
+PR-3 placement layer, the joint spatio-temporal carbon win (ISSUE-4
+acceptance), deadline/capacity conservation (property-based), the
+single-evaluation regression probe for the factorized hot path, and the
+WAN-hop (rtt_s) QoS satellite."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import carbon_model
+from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid
+from repro.serve import (
+    FleetRouter,
+    LearnedPolicy,
+    OraclePolicy,
+    PlacementPolicy,
+    RequestBatch,
+    TemporalPolicy,
+)
+from repro.serve.streams import deferrable_stream, multi_region_stream
+
+ARCH = "h2o-danube-1.8b"
+N_REGIONS = len(DEFAULT_REGIONS)
+
+
+def _stream(n: int, seed: int = 0, n_regions: int = N_REGIONS,
+            max_slack: int = 6):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(16, 4096, n).astype(np.float64)
+    new = rng.integers(8, 512, n).astype(np.float64)
+    avail = np.ones((n, 3), bool)
+    avail[:, 0] = prompt < 2048
+    batch = RequestBatch(
+        prompt_tokens=prompt, max_new_tokens=new,
+        latency_budget_s=rng.choice([0.5, 2.0, 10.0], n),
+        bytes_per_token=np.full(n, 4.0), available=avail,
+        slack_hours=rng.integers(0, max_slack + 1, n).astype(np.float64))
+    return batch, rng.integers(0, n_regions, n), rng.uniform(0.0, 48.0, n)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def base(cfg):
+    return FleetRouter(cfg)
+
+
+@pytest.fixture(scope="module")
+def xgrid():
+    return CarbonGrid.fully_connected(DEFAULT_REGIONS, latency_penalty=1.05)
+
+
+class TestValidation:
+    def test_rejects_non_factorizable_inner(self, base):
+        caps = np.full((N_REGIONS, 3), np.inf)
+        with pytest.raises(ValueError, match="factoriz"):
+            TemporalPolicy(OraclePolicy(base.infra), caps, factorized=False)
+
+    def test_rejects_bad_window_count(self, base):
+        caps = np.full((N_REGIONS, 3), np.inf)
+        with pytest.raises(ValueError, match="n_windows"):
+            TemporalPolicy(OraclePolicy(base.infra), caps, n_windows=7)
+
+    def test_rejects_horizon_beyond_windows(self, base):
+        caps = np.full((N_REGIONS, 3), np.inf)
+        with pytest.raises(ValueError, match="max_defer_h"):
+            TemporalPolicy(OraclePolicy(base.infra), caps, n_windows=12,
+                           max_defer_h=12)
+
+    def test_learned_inner_has_no_factor_hook(self, base):
+        assert not hasattr(LearnedPolicy, "scores_from_factors")
+
+
+class TestZeroSlackParity:
+    """ISSUE-4 acceptance: a TemporalPolicy given no slack IS the PR-3
+    PlacementPolicy — decisions, shed, counts, executing regions, and
+    (both running the factorized accounting) carbon, bit-for-bit."""
+
+    def test_bit_for_bit_on_multi_region_stream(self, cfg, base, xgrid):
+        n = 4000
+        batch, region, t_hours = multi_region_stream(n, N_REGIONS, seed=0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(1.0, 0.25 * n / (N_REGIONS * 24))
+        place = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        temp = FleetRouter(cfg, grid=xgrid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=6))
+        rp, sp = place.route_stream_with_state(batch, region, t_hours)
+        rt, st_ = temp.route_stream_with_state(batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(rp.target),
+                                      np.asarray(rt.target))
+        np.testing.assert_array_equal(np.asarray(sp.shed),
+                                      np.asarray(st_.shed))
+        np.testing.assert_array_equal(np.asarray(rp.counts),
+                                      np.asarray(rt.counts))
+        np.testing.assert_array_equal(np.asarray(rp.exec_region),
+                                      np.asarray(rt.exec_region))
+        np.testing.assert_array_equal(np.asarray(rp.carbon_g),
+                                      np.asarray(rt.carbon_g))
+        assert int(rp.shed_count) == int(rt.shed_count) > 0
+        assert int(rt.deferred_count) == 0
+        assert float(rt.mean_defer_hours) == 0.0
+        assert (np.asarray(st_.defer_hours) == 0).all()
+        hour = np.floor(t_hours).astype(int) % 24
+        np.testing.assert_array_equal(np.asarray(st_.exec_hour), hour)
+
+    def test_zero_slack_huge_caps_match_uncapped_oracle(self, cfg, base):
+        """Caps larger than the stream + zero slack: the temporal engine is
+        a no-op wrapper (identity-adjacency parity with the base router)."""
+        n = 1200
+        batch, region, t_hours = multi_region_stream(n, N_REGIONS, seed=2)
+        caps = np.full((N_REGIONS, 3), float(n + 1))
+        fr = FleetRouter(cfg, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=4))
+        free = base.route_stream(batch, region, t_hours)
+        res = fr.route_stream(batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(res.target),
+                                      np.asarray(free.target))
+        np.testing.assert_array_equal(np.asarray(res.counts),
+                                      np.asarray(free.counts))
+        assert int(res.shed_count) == 0
+        np.testing.assert_allclose(float(res.total_carbon_g),
+                                   float(free.total_carbon_g), rtol=1e-5)
+
+    def test_factorized_placement_matches_legacy_sweep(self, cfg, base,
+                                                       xgrid):
+        """The factorized einsum scorer and the legacy per-region Table-1
+        sweep (the verbatim PR-3 program) agree on every uncapped placement
+        decision — fp32-tolerance scores, identical argmins. (Capped
+        streams go through different-but-equivalent admission programs —
+        fixed-round march vs skip-full attempts — so decision parity is
+        only exact where capacity does not bind.)"""
+        n = 3000
+        batch, region, t_hours = multi_region_stream(n, N_REGIONS, seed=1)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        legacy = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps, factorized=False))
+        fact = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        rl, sl = legacy.route_stream_with_state(batch, region, t_hours)
+        rf, sf = fact.route_stream_with_state(batch, region, t_hours)
+        assert int(rl.shed_count) == int(rf.shed_count) == 0
+        np.testing.assert_array_equal(np.asarray(rl.target),
+                                      np.asarray(rf.target))
+        np.testing.assert_array_equal(np.asarray(rl.exec_region),
+                                      np.asarray(rf.exec_region))
+        np.testing.assert_array_equal(np.asarray(rl.counts),
+                                      np.asarray(rf.counts))
+        np.testing.assert_allclose(np.asarray(rl.carbon_g),
+                                   np.asarray(rf.carbon_g), rtol=1e-5)
+
+    def test_pair_scores_factorized_matches_sweep(self, cfg, base, xgrid):
+        """Raw (N, R, 3) candidate scores: einsum vs per-region sweep."""
+        import jax.numpy as jnp
+
+        n = 512
+        batch, region, t_hours = _stream(n, seed=7)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        pol = PlacementPolicy(OraclePolicy(base.infra), caps, grid=xgrid)
+        w = batch.workload(cfg)
+        hour = jnp.asarray(np.floor(t_hours).astype(np.int32) % 24)
+        home = jnp.asarray(region.astype(np.int32))
+        fr = FleetRouter(cfg, grid=xgrid)
+        env = carbon_model.Environment(
+            ci=fr.grid.table[home, hour],
+            interference=jnp.ones(3, jnp.float32),
+            net_slowdown=jnp.ones(2, jnp.float32))
+        factors = carbon_model.energy_factors_batch(
+            w, base.infra, env.interference, env.net_slowdown)
+        sweep = pol.pair_scores(w, env, batch.avail, home, hour)
+        fact = pol.pair_scores_from_factors(factors, w, env, batch.avail,
+                                            home, hour)
+        a, b = np.asarray(sweep), np.asarray(fact)
+        np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b))
+        mask = np.isfinite(a)
+        np.testing.assert_allclose(a[mask], b[mask], rtol=1e-5)
+
+
+class TestDeferralWins:
+    """ISSUE-4 acceptance: with slack > 0 the joint (region, tier, hour)
+    decision reduces routed gCO2 by >= 10% vs PR-3 cross-region spill on
+    ``deferrable_stream`` while violating zero deadlines."""
+
+    def test_uncapped_joint_beats_spatial_by_10pct(self, cfg, base, xgrid):
+        n = 3000
+        batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        place = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        temp = FleetRouter(cfg, grid=xgrid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        rp = place.route_stream(batch, region, t_hours)
+        rt, st_ = temp.route_stream_with_state(batch, region, t_hours)
+        assert int(rp.shed_count) == int(rt.shed_count) == 0
+        reduction = 1.0 - float(rt.routed_carbon_g) / float(
+            rp.routed_carbon_g)
+        assert reduction >= 0.10, reduction
+        assert int(rt.deferred_count) > 0
+        assert float(rt.mean_defer_hours) > 0.0
+        # zero deadline violations: defer within [0, slack] for every row
+        defer = np.asarray(st_.defer_hours)
+        assert (defer >= 0).all()
+        assert (defer <= batch.slack_h).all()
+        # interactive (zero-slack) rows never defer
+        assert (defer[batch.slack_h == 0] == 0).all()
+
+    def test_capped_joint_beats_spatial_and_sheds_no_more(self, cfg, base,
+                                                          xgrid):
+        """Moderate cap pressure: deferral drains the evening peak into
+        later windows, so the joint policy both routes greener and sheds
+        less than space-only spill."""
+        n = 3000
+        batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(1.0, 0.6 * n / (N_REGIONS * 24))
+        place = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        temp = FleetRouter(cfg, grid=xgrid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        rp = place.route_stream(batch, region, t_hours)
+        rt = temp.route_stream(batch, region, t_hours)
+        assert float(rt.total_carbon_g) < float(rp.total_carbon_g)
+        assert int(rt.shed_count) <= int(rp.shed_count)
+        assert int(rt.deferred_count) > 0
+
+    def test_defer_only_mode_defers_at_home(self, cfg, base):
+        """Identity adjacency: deferral without spatial spill — every
+        request executes in its home region, some in a later hour."""
+        n = 2000
+        batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=1)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        fr = FleetRouter(cfg, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(res.exec_region), region)
+        assert int(res.spilled_count) == 0
+        assert int(res.deferred_count) > 0
+        defer = np.asarray(state.defer_hours)
+        assert (defer <= batch.slack_h).all()
+        # deferral never hurts: same stream, same caps, no deferral
+        zero = FleetRouter(cfg, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=0))
+        rz = zero.route_stream(batch, region, t_hours)
+        assert float(res.total_carbon_g) <= float(rz.total_carbon_g) + 1e-6
+
+
+class TestSingleEvaluation:
+    """Satellite regression: the factorized hot path runs Table 1 exactly
+    ONCE per batch — no per-candidate-region sweeps, no out_exec
+    re-evaluation after admission (probed by counting trace-time calls of
+    ``carbon_model.evaluate``)."""
+
+    @staticmethod
+    def _count_evaluates(monkeypatch, make_router, batch, region, t_hours):
+        calls = {"n": 0}
+        real = carbon_model.evaluate
+
+        def counting(*a, **k):
+            calls["n"] += 1
+            return real(*a, **k)
+
+        monkeypatch.setattr(carbon_model, "evaluate", counting)
+        fr = make_router()  # construct AFTER the patch: jit traces lazily
+        fr.route_stream(batch, region, t_hours)
+        return calls["n"]
+
+    def test_factorized_placement_evaluates_once(self, cfg, base, xgrid,
+                                                 monkeypatch):
+        batch, region, t_hours = _stream(256, seed=3)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = 4.0
+        n = self._count_evaluates(
+            monkeypatch,
+            lambda: FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+                OraclePolicy(base.infra), caps)),
+            batch, region, t_hours)
+        assert n == 1
+
+    def test_temporal_evaluates_once(self, cfg, base, xgrid, monkeypatch):
+        batch, region, t_hours = _stream(256, seed=4)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = 4.0
+        n = self._count_evaluates(
+            monkeypatch,
+            lambda: FleetRouter(cfg, grid=xgrid, policy=TemporalPolicy(
+                OraclePolicy(base.infra), caps, max_defer_h=4)),
+            batch, region, t_hours)
+        assert n == 1
+
+    def test_legacy_sweep_evaluates_many_times(self, cfg, base, xgrid,
+                                               monkeypatch):
+        """The probe itself is live: the PR-3 program re-evaluates Table 1
+        per candidate region plus the out_exec pass."""
+        batch, region, t_hours = _stream(256, seed=5)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = 4.0
+        n = self._count_evaluates(
+            monkeypatch,
+            lambda: FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+                OraclePolicy(base.infra), caps, factorized=False)),
+            batch, region, t_hours)
+        assert n > 4
+
+
+class TestWanHop:
+    """Satellite: the (R, R) rtt_s matrix enters the QoS latency check —
+    tight-budget requests refuse remote placement outright."""
+
+    def test_default_grid_has_zero_rtt(self, xgrid):
+        np.testing.assert_array_equal(np.asarray(xgrid.rtt_s),
+                                      np.zeros((N_REGIONS, N_REGIONS)))
+
+    def test_rtt_validation(self):
+        bad = np.full((N_REGIONS, N_REGIONS), 0.1, np.float32)
+        with pytest.raises(ValueError, match="diagonal"):
+            CarbonGrid.from_regions(DEFAULT_REGIONS, rtt_s=bad)
+        neg = np.zeros((N_REGIONS, N_REGIONS), np.float32)
+        neg[0, 1] = -1.0
+        with pytest.raises(ValueError, match="non-negative"):
+            CarbonGrid.from_regions(DEFAULT_REGIONS, rtt_s=neg)
+        with pytest.raises(ValueError, match="rtt_s must be"):
+            CarbonGrid.from_regions(DEFAULT_REGIONS,
+                                    rtt_s=np.zeros((2, 2), np.float32))
+
+    def test_scalar_rtt_has_zero_diagonal(self):
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS, rtt_s=0.08)
+        rtt = np.asarray(grid.rtt_s)
+        np.testing.assert_array_equal(np.diag(rtt), np.zeros(N_REGIONS))
+        assert (rtt[~np.eye(N_REGIONS, dtype=bool)] == np.float32(0.08)).all()
+
+    def test_zero_rtt_is_bit_for_bit_noop(self, cfg, base):
+        """Explicit zero rtt_s reproduces the default-grid placement
+        decisions bit-for-bit (the PR-3 parity satellite)."""
+        n = 2000
+        batch, region, t_hours = multi_region_stream(n, N_REGIONS, seed=3)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(1.0, 0.25 * n / (N_REGIONS * 24))
+        g0 = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        g1 = CarbonGrid.fully_connected(DEFAULT_REGIONS, rtt_s=0.0)
+        a, sa = FleetRouter(cfg, grid=g0, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps)).route_stream_with_state(
+            batch, region, t_hours)
+        b, sb = FleetRouter(cfg, grid=g1, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps)).route_stream_with_state(
+            batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(a.target),
+                                      np.asarray(b.target))
+        np.testing.assert_array_equal(np.asarray(sa.shed),
+                                      np.asarray(sb.shed))
+        np.testing.assert_array_equal(np.asarray(a.exec_region),
+                                      np.asarray(b.exec_region))
+        np.testing.assert_array_equal(np.asarray(a.carbon_g),
+                                      np.asarray(b.carbon_g))
+
+    def test_tight_budgets_refuse_remote_placement(self, cfg, base):
+        """With a WAN hop bigger than the tight latency budgets, capacity
+        overflow of tight-budget requests sheds (or stays home) instead of
+        spilling; relaxed-budget requests still spill remotely."""
+        n = 3000
+        rng = np.random.default_rng(9)
+        prompt = rng.integers(16, 2048, n).astype(np.float64)
+        budget = rng.choice([0.6, 30.0], n)
+        batch = RequestBatch(
+            prompt_tokens=prompt,
+            max_new_tokens=rng.integers(8, 128, n).astype(np.float64),
+            latency_budget_s=budget,
+            bytes_per_token=np.full(n, 4.0),
+            available=np.ones((n, 3), bool))
+        region = rng.integers(0, N_REGIONS, n)
+        t_hours = rng.uniform(0.0, 24.0, n)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = 3.0  # starve DCs: heavy spill pressure
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS,
+                                          latency_penalty=1.0, rtt_s=1.0)
+        fr = FleetRouter(cfg, grid=grid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        ex = np.asarray(res.exec_region)
+        shed = np.asarray(state.shed)
+        moved = (ex != region) & ~shed
+        # a 1s hop busts the 0.6s budgets outright
+        assert not moved[budget < 1.0].any()
+        assert moved[budget > 1.0].any()
+        # same without the hop: tight-budget requests do spill
+        free = FleetRouter(cfg, grid=CarbonGrid.fully_connected(
+            DEFAULT_REGIONS, latency_penalty=1.0), policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        r0, s0 = free.route_stream_with_state(batch, region, t_hours)
+        moved0 = (np.asarray(r0.exec_region) != region) & ~np.asarray(s0.shed)
+        assert moved0[budget < 1.0].any()
+
+    def test_temporal_respects_rtt(self, cfg, base):
+        """The WAN hop also gates the deferral engine's remote candidates."""
+        n = 2000
+        batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=5)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = 3.0
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS,
+                                          latency_penalty=1.0, rtt_s=1.0)
+        fr = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=8))
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        ex = np.asarray(res.exec_region)
+        shed = np.asarray(state.shed)
+        moved = (ex != region) & ~shed
+        tight = np.asarray(batch.latency_budget_s) < 1.0
+        assert not moved[tight].any()
+
+
+class TestConservation:
+    """Tentpole property (hypothesis): every request executes within
+    [arrival, arrival + slack]; routed + shed == total; no (region, tier,
+    exec-hour) cell exceeds its cap; spill only along adjacency."""
+
+    N = 140
+    R = 2
+
+    @hypothesis.settings(max_examples=6, deadline=None)
+    @hypothesis.given(
+        caps_flat=st.lists(
+            st.one_of(st.integers(0, 4), st.just(np.inf)),
+            min_size=6, max_size=6),
+        link=st.tuples(st.booleans(), st.booleans()),
+        max_slack=st.integers(0, 5),
+        seed=st.integers(0, 3),
+    )
+    def test_deadlines_conservation_and_caps(self, caps_flat, link,
+                                             max_slack, seed):
+        cfg = get_config(ARCH)
+        from repro.core.infrastructure import pack_infra, tpu_fleet
+
+        caps = np.asarray(caps_flat, np.float64).reshape(self.R, 3)
+        adjacency = np.eye(self.R, dtype=bool)
+        adjacency[0, 1], adjacency[1, 0] = link
+        grid = CarbonGrid.from_regions(DEFAULT_REGIONS[:2],
+                                       adjacency=adjacency,
+                                       latency_penalty=1.03)
+        infra = pack_infra(tpu_fleet(), "act")
+        fr = FleetRouter(cfg, regions=DEFAULT_REGIONS[:2], grid=grid,
+                         policy=TemporalPolicy(OraclePolicy(infra), caps,
+                                               max_defer_h=5))
+        batch, region, t_hours = _stream(self.N, seed=seed,
+                                         n_regions=self.R,
+                                         max_slack=max_slack)
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        shed = np.asarray(state.shed)
+        defer = np.asarray(state.defer_hours)
+        eh = np.asarray(state.exec_hour)
+        arr = np.floor(t_hours).astype(int) % 24
+        # deadlines: execution within [arrival, arrival + slack] always
+        assert (defer >= 0).all()
+        assert (defer <= np.minimum(batch.slack_h, 5)).all()
+        np.testing.assert_array_equal(eh, (arr + defer) % 24)
+        # conservation: every request is either capacity-routed or shed
+        assert int(np.asarray(res.counts).sum()) + int(shed.sum()) == self.N
+        # no (region, tier, exec-hour) cell exceeds its cap
+        tgt = np.asarray(res.target)
+        ex = np.asarray(state.exec_region)
+        for h in range(24):
+            for r in range(self.R):
+                for t in range(3):
+                    got = int(((eh == h) & (ex == r) & (tgt == t)
+                               & ~shed).sum())
+                    assert got <= caps[r, t], (h, r, t, got)
+        # spill only along adjacency edges
+        assert adjacency[region[~shed], ex[~shed]].all()
