@@ -9,7 +9,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import BenchRow, TARGET_NAMES, time_us
 from repro.configs import ARCH_IDS, get_config

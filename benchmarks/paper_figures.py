@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,7 +27,6 @@ from repro.core.runtime_variance import VarianceScenario
 from repro.core.workloads import (
     ALL_PAPER_WORKLOADS,
     ARVR_WORKLOADS,
-    GAME_WORKLOADS,
     by_name,
 )
 

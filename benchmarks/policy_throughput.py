@@ -28,6 +28,20 @@ spill) vs. defer-only (identity adjacency) vs. joint spatio-temporal
 placement, pinning the gCO2 reduction from making the HOUR a placement
 axis. Runs at min(n, 200k): candidate scores are (N, S+1, R, 3).
 
+A fourth section is the ISSUE-5 multi-day + learned-factorized pin. At
+full n the cross-region placement path runs learned-vs-oracle head-to-head
+on the factorized einsum engines (the ~2x-of-oracle learned-throughput
+acceptance: a CI-linear classification scheduler collapses to one probed
+einsum, the piecewise regression scheduler re-featurizes per candidate
+region). At min(n, 200k) the joint deferral engines route the new 2-day
+``deferrable_stream_multiday`` against a rolling ``CarbonGrid`` with a
+guard day (3 days, so the last arrivals' deferral windows stay inside the
+horizon instead of wrapping back into day one):
+oracle vs. learned joint (region, tier, hour) scheduling, plus a
+repeated-diurnal vs. day-scaled (cleaner day two) grid pair showing
+midnight-crossing deferral chasing tomorrow's greener hours — capacity
+charged to day-two cells, not aliased into day one's.
+
 Run:  PYTHONPATH=src python -m benchmarks.policy_throughput [--n 1000000]
 """
 
@@ -59,6 +73,7 @@ from repro.serve import (
 )
 from repro.serve.streams import (
     deferrable_stream,
+    deferrable_stream_multiday,
     diurnal_stream,
     multi_region_stream,
 )
@@ -136,6 +151,7 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
 
     rows += placement_rows(cfg, infra, n=n, reps=reps)
     rows += temporal_rows(cfg, infra, n=min(n, 200_000), reps=reps)
+    rows += multiday_rows(cfg, infra, train, n=n, reps=reps)
     return rows
 
 
@@ -235,6 +251,89 @@ def temporal_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
             f"spilled={int(res.spilled_count)} "
             f"deferred={int(res.deferred_count)} "
             f"mean_defer_h={float(res.mean_defer_hours):.2f}"))
+    return rows
+
+
+def multiday_rows(cfg, infra, train, n: int, reps: int = 1
+                  ) -> list[BenchRow]:
+    """Rolling multi-day horizon + learned policies on factorized engines.
+
+    Full-n placement half: learned-vs-oracle cross-region einsum scoring
+    (uncapped, multi-day stream/grid) — the learned-throughput-within-~2x
+    pin. Reduced-n temporal half: learned-vs-oracle joint deferral under
+    binding caps, and the repeated-diurnal vs cleaner-day-two grids.
+    """
+    base = FleetRouter(cfg)
+    n_regions = len(base.regions)
+    n_t = min(n, 200_000)
+    batch, region, t_hours = deferrable_stream_multiday(n, n_regions,
+                                                        n_days=2)
+    # 3-day grids for the 2-day stream: the guard day keeps the last
+    # arrivals' 16h deferral windows inside the rolling horizon (a window
+    # wrapping off the horizon end would re-enter day one's cells — the
+    # sizing rule in TemporalPolicy's docstring)
+    grid2 = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05,
+                                       n_days=3)
+    # day two (and its guard day) 15% cleaner: the multi-day forecast
+    # midnight-crossing deferral should chase (a stand-in for a real
+    # multi-day CI trajectory)
+    grid2c = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05,
+                                        n_days=3,
+                                        day_scale=(1.0, 0.85, 0.85))
+    learned_lin = LearnedPolicy.fit(ClassificationScheduler(), train)
+    learned_gen = LearnedPolicy.fit(RegressionScheduler(), train)
+    free = np.full((n_regions, 3), np.inf)
+    caps = np.full((n_regions, 3), np.inf)
+    per_cell = max(1.0, 0.6 * n_t / (n_regions * 48))
+    caps[:, 1] = caps[:, 2] = per_cell
+
+    rows = []
+    # --- full-n: learned vs oracle on the cross-region einsum path -------
+    place = [
+        ("multiday_place_oracle", OraclePolicy(infra)),
+        ("multiday_place_learned_classification", learned_lin),
+        ("multiday_place_learned_regression", learned_gen),
+    ]
+    oracle_us = None
+    for name, inner in place:
+        fr = FleetRouter(cfg, grid=grid2,
+                         policy=PlacementPolicy(inner, free))
+        dt, res = _time_stream(fr, batch, region, t_hours, reps)
+        us = dt / n * 1e6
+        if oracle_us is None:
+            oracle_us = us
+        rows.append(BenchRow(
+            name, us,
+            f"req/s={1e6 / us:.0f} "
+            f"routed_g={float(res.routed_carbon_g):.4g} "
+            f"spilled={int(res.spilled_count)} "
+            f"vs_oracle={us / oracle_us:.2f}x"))
+
+    # --- reduced-n: joint deferral across midnight, learned vs oracle ----
+    bt, rt_, tt = (batch, region, t_hours) if n == n_t else \
+        deferrable_stream_multiday(n_t, n_regions, n_days=2)
+    temporal = [
+        ("multiday_joint_oracle", grid2, OraclePolicy(infra)),
+        ("multiday_joint_learned_classification", grid2, learned_lin),
+        ("multiday_joint_oracle_cleaner_day2", grid2c, OraclePolicy(infra)),
+    ]
+    oracle_us = oracle_g = None
+    for name, grid, inner in temporal:
+        fr = FleetRouter(cfg, grid=grid,
+                         policy=TemporalPolicy(inner, caps, max_defer_h=16))
+        dt, res = _time_stream(fr, bt, rt_, tt, reps)
+        us = dt / n_t * 1e6
+        if oracle_us is None:
+            oracle_us, oracle_g = us, float(res.routed_carbon_g)
+        rows.append(BenchRow(
+            name, us,
+            f"req/s={1e6 / us:.0f} "
+            f"routed_g={float(res.routed_carbon_g):.4g} "
+            f"saved_vs_oracle_g={oracle_g - float(res.routed_carbon_g):.4g} "
+            f"shed={int(res.shed_count)} "
+            f"deferred={int(res.deferred_count)} "
+            f"mean_defer_h={float(res.mean_defer_hours):.2f} "
+            f"vs_oracle={us / oracle_us:.2f}x"))
     return rows
 
 

@@ -7,7 +7,6 @@ prints the carbon-optimal execution target per scenario.
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 
 from repro.core import (
     ChargingBehavior,

@@ -243,14 +243,27 @@ class CarbonGrid:
     ``FleetRouter.env_at``, ``route_many_envs``, and placement policies all
     consume, so region is a first-class routing axis instead of a loop index.
 
-    Arrays (R = number of regions):
+    The time axis is a *rolling horizon* of ``H = n_days * 24`` absolute
+    hours (H = 24, one diurnal day, is the default and the PR-3/4 parity
+    shape): hour ``h`` of the horizon is day ``h // 24``, hour-of-day
+    ``h % 24``. A repeated-diurnal horizon (``from_regions(n_days=k)`` /
+    ``repeat``) tiles the same 24-hour trace so every day looks alike —
+    bit-for-bit the single-day tables per day — while ``day_scale`` (or an
+    explicitly constructed ``ci_hourly``) lets consecutive days carry real
+    multi-day CI trajectories (CASPER-style provisioning: tomorrow's grid
+    is not today's). Consumers index absolute hours, so capacity windows
+    and deferral horizons that cross midnight land in the NEXT day's cells
+    instead of aliasing modulo 24 into already-spent budgets.
 
-    ``ci_hourly``        (R, 24) grid CI per region and hour-of-day, gCO2/kWh.
+    Arrays (R = number of regions, H = horizon hours):
+
+    ``ci_hourly``        (R, H) grid CI per region and absolute horizon
+                         hour, gCO2/kWh.
     ``ci_mobile``        (R,) device-battery CI (flat across the day — the
                          battery buffers the grid, paper §3.2).
     ``ci_core``          (R,) core-network-path CI (crosses many grids, so a
                          daily average).
-    ``pue``              (R, 24) datacenter power-usage-effectiveness: the
+    ``pue``              (R, H) datacenter power-usage-effectiveness: the
                          facility multiplier on DC draw (cooling, conversion
                          losses). Applied to the edge-DC and hyperscale-DC
                          components of ``table``; 1.0 = the bare-IT accounting
@@ -285,8 +298,17 @@ class CarbonGrid:
         return self.ci_hourly.shape[0]
 
     @property
+    def horizon_h(self) -> int:
+        """Total horizon length in hours (H = n_days * 24)."""
+        return self.ci_hourly.shape[1]
+
+    @property
+    def n_days(self) -> int:
+        return self.horizon_h // HOURS_PER_DAY
+
+    @property
     def table(self) -> jax.Array:
-        """(R, 24, 5) per-Component CI table in the ``Environment.make``
+        """(R, H, 5) per-Component CI table in the ``Environment.make``
         component order [mobile, edge_net, edge_dc, core_net, hyper_dc];
         edge network and edge DC share CI_E, and PUE scales the two DC
         components (a facility overhead draws the same grid mix)."""
@@ -299,12 +321,43 @@ class CarbonGrid:
             self.ci_hourly * self.pue,
         ], axis=-1)
 
+    def repeat(self, n_days: int,
+               day_scale: np.ndarray | None = None) -> "CarbonGrid":
+        """Tile this grid's one-day (or multi-day) horizon ``n_days`` times —
+        the repeated-diurnal constructor of the rolling multi-day horizon.
+
+        With ``day_scale=None`` every repeated day is bit-for-bit the
+        original tables, so a single-day consumer indexing ``hour % 24``
+        and a multi-day consumer indexing the absolute hour see identical
+        CI rows (parity-tested). ``day_scale`` ((n_days,) positive floats)
+        scales the *grid-trace* CI of each repeated day — a cheap stand-in
+        for a real multi-day CI forecast (tomorrow windier/dirtier than
+        today); device-battery and core-path CI stay at their flat daily
+        values (the battery and the long-haul path average over days).
+        """
+        if n_days < 1:
+            raise ValueError(f"n_days must be >= 1, got {n_days}")
+        if day_scale is None:
+            scale = np.ones(n_days, np.float32)
+        else:
+            scale = np.asarray(day_scale, np.float32).reshape(-1)
+            if scale.shape[0] != n_days:
+                raise ValueError(f"day_scale must have {n_days} entries, "
+                                 f"got {scale.shape[0]}")
+            if (scale <= 0.0).any():
+                raise ValueError("day_scale entries must be positive")
+        ci = jnp.concatenate([self.ci_hourly * s for s in scale], axis=1)
+        pue = jnp.concatenate([self.pue] * n_days, axis=1)
+        return dataclasses.replace(self, ci_hourly=ci, pue=pue)
+
     @classmethod
     def from_regions(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
                      *, adjacency: np.ndarray | None = None,
                      latency_penalty: np.ndarray | float | None = None,
                      pue: np.ndarray | float = 1.0,
-                     rtt_s: np.ndarray | float | None = None) -> "CarbonGrid":
+                     rtt_s: np.ndarray | float | None = None,
+                     n_days: int = 1,
+                     day_scale: np.ndarray | None = None) -> "CarbonGrid":
         """Build the stacked grid from per-region specs.
 
         ``adjacency`` defaults to the identity (no cross-region spill);
@@ -314,7 +367,10 @@ class CarbonGrid:
         is one factor per region (taking precedence over per-hour when
         R == 24), a (24,) row one factor per hour shared by all regions;
         ``rtt_s`` defaults to 0 everywhere (scalar = that round-trip for
-        every off-diagonal hop, 0.0 on the diagonal).
+        every off-diagonal hop, 0.0 on the diagonal). ``n_days`` > 1 builds
+        a rolling multi-day horizon by repeating the diurnal day (see
+        ``repeat``; ``day_scale`` optionally scales each day's grid CI);
+        the default reproduces the single-day grid bit-for-bit.
         """
         n = len(regions)
         ci_rows, mob, core = [], [], []
@@ -366,7 +422,7 @@ class CarbonGrid:
         pue_arr = np.asarray(pue, np.float32)
         if pue_arr.ndim == 1 and pue_arr.shape[0] == n:
             pue_arr = pue_arr[:, None]  # (R,) = one facility factor/region
-        return cls(
+        grid = cls(
             ci_hourly=jnp.stack(ci_rows),
             ci_mobile=jnp.stack(mob),
             ci_core=jnp.stack(core),
@@ -376,19 +432,25 @@ class CarbonGrid:
             latency_penalty=jnp.asarray(penalty),
             rtt_s=jnp.asarray(rtt),
         )
+        if n_days != 1 or day_scale is not None:
+            grid = grid.repeat(n_days, day_scale)
+        return grid
 
     @classmethod
     def fully_connected(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
                         *, latency_penalty: float = 1.05,
                         pue: np.ndarray | float = 1.0,
-                        rtt_s: np.ndarray | float | None = None
+                        rtt_s: np.ndarray | float | None = None,
+                        n_days: int = 1,
+                        day_scale: np.ndarray | None = None
                         ) -> "CarbonGrid":
         """Every region may spill to every other at a uniform effective-carbon
         penalty per WAN hop (CarbonEdge-style mesoscale placement)."""
         n = len(regions)
         return cls.from_regions(regions, adjacency=np.ones((n, n), bool),
                                 latency_penalty=latency_penalty, pue=pue,
-                                rtt_s=rtt_s)
+                                rtt_s=rtt_s, n_days=n_days,
+                                day_scale=day_scale)
 
 
 # --- Uncertainty injection (paper §5.2) ---------------------------------------

@@ -417,6 +417,19 @@ def qos_feasible_from_factors(f: EnergyFactors, w: Workload,
     return jax.vmap(qos_feasible)(f.latency, f.t_comm, w, extra[:, None])
 
 
+def pair_qos_feasible_from_factors(f: EnergyFactors, w: Workload,
+                                   extra_latency: jax.Array) -> jax.Array:
+    """(R, N, 3) QoS feasibility of every candidate-region placement under
+    per-candidate WAN hops ``extra_latency`` (R, N) — the ONE definition of
+    hop-adjusted feasibility shared by the oracle's factorized pair scorer
+    and the learned policies' hop gate, so their refusal semantics can
+    never diverge. Availability is the caller's to mask."""
+    lat = f.latency[None] + jnp.asarray(extra_latency,
+                                        jnp.float32)[:, :, None]
+    return ((lat <= w.latency_req[None, :, None])
+            & stream_feasible_batch(f.t_comm, w)[None])
+
+
 #: (N, 3) fps-sustain feasibility over batched factors (CI- and hop-free).
 stream_feasible_batch = jax.vmap(stream_feasible)
 

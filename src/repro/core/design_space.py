@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import carbon_model, carbon_intensity as ci_mod
 from repro.core.carbon_intensity import ChargingBehavior, Grid
-from repro.core.carbon_model import CFBreakdown, Environment
+from repro.core.carbon_model import Environment
 from repro.core.infrastructure import Fleet, InfraParams, pack_infra
 from repro.core.runtime_variance import VarianceScenario, scenario_multipliers
 from repro.core.workloads import Workload, WorkloadInfo, stack_workloads

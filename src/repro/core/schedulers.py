@@ -135,6 +135,13 @@ def _with_bias(X: jax.Array) -> jax.Array:
 # ``jax_scores(params, X) -> (N, 3)`` (lower is better) that
 # repro.serve.policy.LearnedPolicy jits into the fleet routing hot path.
 # ``fit_predict`` composes the two, preserving the Fig-14 offline protocol.
+# ``ci_linear`` declares that ``jax_scores`` is AFFINE in the feature rows
+# (hence linear in the CI columns): LearnedPolicy then probes per-column
+# sensitivities once and scores every candidate (region, hour) placement as
+# one einsum — the learned analogue of the oracle's factorized evaluator.
+# Only claim it for truly affine scorers: the regression scheduler's
+# latency-rank indicator (a step in the features), the GP's RBF kernel, and
+# the RL scheduler's quadratic CI features all disqualify.
 
 
 class OracleScheduler:
@@ -152,6 +159,9 @@ class RegressionScheduler:
     """Ridge regression of per-target log-carbon + latency [104]."""
 
     name = "regression"
+    #: the +10 latency-rank indicator is a step function of the features,
+    #: so the scorer is only piecewise-affine — no sensitivity probing
+    ci_linear = False
 
     def __init__(self, ridge: float = 1e-3):
         self.ridge = ridge
@@ -193,6 +203,9 @@ class ClassificationScheduler:
     """
 
     name = "classification"
+    #: -(Xb @ W) is affine in the features: candidate (region, hour) CI
+    #: deltas collapse to one einsum in LearnedPolicy.pair_scores_from_factors
+    ci_linear = True
 
     def __init__(self, ridge: float = 1e-2):
         self.ridge = ridge

@@ -201,8 +201,7 @@ def lower_cell(arch: str, shape_id: str, mesh, *,
         p_shard = param_shardings(mesh, params)
 
         if kind == "train":
-            from repro.train.optimizer import Optimizer
-            from repro.train.train_step import TrainState, init_train_state
+            from repro.train.train_step import TrainState
 
             # training shards weights + moments ZeRO/FSDP-style (rules.py)
             p_shard_train = param_shardings(mesh, params, fsdp=True)

@@ -43,7 +43,6 @@ from repro.models.layers import (
     mlp,
     rmsnorm,
 )
-from repro.models.mamba2 import SSMState
 
 
 # ---------------------------------------------------------------------------

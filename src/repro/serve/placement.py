@@ -139,10 +139,12 @@ class PlacementPolicy(RoutingPolicy):
 
     The effective score of pair (r', t) for a request homed in r is
     ``inner.scores`` evaluated under region r' CI at the request's hour,
-    times ``grid.latency_penalty[r, r']``, or +inf where
-    ``grid.adjacency[r, r']`` is False. Scores are assumed positive (true
-    for carbon/latency/energy oracles and regression-on-carbon policies),
-    so the multiplicative penalty always disfavours remote execution.
+    scaled by ``grid.latency_penalty[r, r']``, or +inf where
+    ``grid.adjacency[r, r']`` is False. The penalty is applied sign-aware
+    (``s * pen`` for s >= 0, ``s / pen`` otherwise) so it disfavours remote
+    execution for negative scores too — learned policies (classification
+    logits, log-carbon regressions) produce those; positive scores (the
+    oracle family) keep the historical ``s * pen`` bit-for-bit.
 
     With identity adjacency the policy statically reduces to tier-only
     spill: one home-region scoring (reusing the router's Table-1 evaluation
@@ -154,7 +156,12 @@ class PlacementPolicy(RoutingPolicy):
     inner: RoutingPolicy
     caps: Any  # array-like (R, 3); jnp.inf = uncapped
     grid: CarbonGrid | None = None
-    n_windows: int = 24
+    #: capacity windows over the grid's rolling horizon. None (default)
+    #: resolves to the horizon length when the grid binds — one window per
+    #: ABSOLUTE hour, so a multi-day grid gives day two fresh budgets
+    #: (24 on the single-day grid: the historical behaviour, bit-for-bit).
+    #: An explicit count must divide the horizon.
+    n_windows: int | None = None
     #: score candidate regions via the factorized einsum evaluator when the
     #: inner policy supports it (``scores_from_factors``) — one Table-1
     #: evaluation per batch instead of one sweep per candidate region.
@@ -170,6 +177,12 @@ class PlacementPolicy(RoutingPolicy):
         self.name = f"placed-{self.inner.name}"
         self._factorizable = (self.factorized
                               and hasattr(self.inner, "scores_from_factors"))
+        # remember whether the window count is horizon-derived: binding
+        # re-resolves it from the bound grid every time, so a resolved
+        # value can never be carried stale onto a different-horizon grid
+        # (an explicitly configured count is honoured — and validated —
+        # as given)
+        self._auto_windows = self.n_windows is None
         if self.grid is not None:
             self._check_grid(self.grid)
 
@@ -177,6 +190,17 @@ class PlacementPolicy(RoutingPolicy):
         if grid.n_regions != self._caps.shape[0]:
             raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
                              f"grid has {grid.n_regions}")
+        self._horizon_h = grid.horizon_h
+        if self._auto_windows:
+            # one capacity window per absolute horizon hour: day-two
+            # arrivals (and deferrals crossing midnight) charge day-two
+            # cells instead of aliasing modulo 24 into day one's budgets
+            self.n_windows = self._horizon_h
+        if self._horizon_h % self.n_windows != 0:
+            raise ValueError(
+                f"n_windows must divide the grid horizon "
+                f"({self._horizon_h} h) so every capacity window covers a "
+                f"whole number of hours, got {self.n_windows}")
         adjacency = np.asarray(grid.adjacency)
         # Legacy-path spill rounds: a request has at most (adjacent regions
         # x feasible tiers) finite pairs, so rounds beyond that never admit.
@@ -265,8 +289,8 @@ class PlacementPolicy(RoutingPolicy):
         home [mobile, edge_net] with the candidate's [edge_dc, core_net,
         hyper_dc]. For the same reason the on-device tier exists only at
         home — remote (region', MOBILE) pairs are structurally +inf."""
-        table = self.grid.table  # (R, 24, 5)
-        ci_all = table[:, hour % 24, :]  # (R, N, 5)
+        table = self.grid.table  # (R, H, 5)
+        ci_all = table[:, hour % table.shape[1], :]  # (R, N, 5)
         home_ci = env.ci  # (N, 5) — the env the router routes/accounts under
         interference, net_slowdown = env.interference, env.net_slowdown
 
@@ -284,14 +308,18 @@ class PlacementPolicy(RoutingPolicy):
         """Apply the placement structure to raw (N, R, 3) candidate scores:
         home->candidate latency penalty, +inf where not adjacent, and the
         structural exclusion of remote (region', MOBILE) pairs (the phone
-        only exists at home)."""
-        pen = self.grid.latency_penalty[home]  # (N, R)
+        only exists at home). The penalty (>= 1 off-diagonal) must move a
+        score AWAY from being picked whatever its sign, so negative scores
+        (learned logits / log-carbon) divide instead of multiply; the
+        non-negative branch is the historical ``s * pen``, bit-for-bit."""
+        pen = self.grid.latency_penalty[home][:, :, None]  # (N, R, 1)
         adj = self.grid.adjacency[home]  # (N, R)
         n_regions = self._caps.shape[0]
         remote = jnp.arange(n_regions)[None, :] != home[:, None]  # (N, R)
         mobile = (jnp.arange(N_TARGETS) == 0)[None, None, :]
         allowed = adj[:, :, None] & ~(remote[:, :, None] & mobile)
-        return jnp.where(allowed, s * pen[:, :, None], jnp.inf)
+        penalized = jnp.where(s >= 0.0, s * pen, s / pen)
+        return jnp.where(allowed, penalized, jnp.inf)
 
     def pair_scores_from_factors(self, factors: EnergyFactors, w, env, avail,
                                  home: jax.Array, hour: jax.Array
@@ -302,29 +330,39 @@ class PlacementPolicy(RoutingPolicy):
         Table-1 re-evaluation per region — plus the WAN-hop
         ``grid.rtt_s[home, r']`` in each candidate's QoS latency check
         (skipped statically when the grid has no rtt_s anywhere)."""
-        table = self.grid.table  # (R, 24, 5)
-        ci_dc = table[..., 2:][:, hour % 24, :]  # (R, N, 3): relocating CI
+        table = self.grid.table  # (R, H, 5)
+        ci_dc = table[..., 2:][:, hour % table.shape[1], :]  # (R, N, 3)
         home_ci = env.ci  # (N, 5)
         extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
         s = self._inner_pair_scores(factors, w, home_ci, ci_dc, avail,
-                                    extra)  # (R, N, 3)
+                                    extra, hour=hour,
+                                    interference=env.interference,
+                                    net_slowdown=env.net_slowdown)
         return self._mask_pairs(jnp.moveaxis(s, 0, 1), home)
 
     def _inner_pair_scores(self, factors, w, home_ci, cand_ci_dc, avail,
-                           extra) -> jax.Array:
+                           extra, *, hour=None, interference=None,
+                           net_slowdown=None) -> jax.Array:
         """(R, N, 3) candidate scores via the inner policy's vectorized
         ``pair_scores_from_factors`` when it has one, else a vmap of its
         per-region ``scores_from_factors``. ``cand_ci_dc`` carries only the
-        relocating [edge_dc, core_net, hyper_dc] CI components."""
+        relocating [edge_dc, core_net, hyper_dc] CI components; ``hour`` /
+        ``interference`` / ``net_slowdown`` are the non-CI scoring context
+        feature-based policies (``LearnedPolicy``) need — the execution
+        hour here, not the arrival hour, so deferred candidates are scored
+        with the features of the hour they would actually run in."""
         vectorized = getattr(self.inner, "pair_scores_from_factors", None)
         if vectorized is not None:
             return vectorized(factors, w, home_ci, cand_ci_dc, avail,
-                              extra_latency=extra)
+                              extra_latency=extra, hour=hour,
+                              interference=interference,
+                              net_slowdown=net_slowdown)
 
         def one_region(ci_rows, ex):
             ci_mixed = jnp.concatenate([home_ci[:, :2], ci_rows], axis=1)
-            return self.inner.scores_from_factors(factors, w, ci_mixed,
-                                                  avail, extra_latency=ex)
+            return self.inner.scores_from_factors(
+                factors, w, ci_mixed, avail, extra_latency=ex, hour=hour,
+                interference=interference, net_slowdown=net_slowdown)
 
         if extra is None:
             extra = jnp.zeros((cand_ci_dc.shape[0], home_ci.shape[0]),
@@ -334,9 +372,12 @@ class PlacementPolicy(RoutingPolicy):
     def _use_factors(self, factors) -> bool:
         """Can this decide() call run the factorized program? Needs an
         inner-policy einsum scorer plus either router-provided factors or
-        an ``inner.infra`` to compute them from."""
-        return self._factorizable and (factors is not None
-                                       or hasattr(self.inner, "infra"))
+        an ``inner.infra`` to compute them from (a ``LearnedPolicy``
+        carries the attribute but may hold None — fit with ``infra=`` to
+        enable self-computed factors outside a FleetRouter)."""
+        return self._factorizable and (
+            factors is not None
+            or getattr(self.inner, "infra", None) is not None)
 
     def _cross_scores_factorized(self, factors, w, env, avail, home, hr):
         """(N, R, 3) candidate-pair scores on the einsum evaluator,
@@ -392,7 +433,17 @@ class PlacementPolicy(RoutingPolicy):
                 factors, w, env, avail, home, hr).reshape(n, n_pairs)
             return self._decide_cross(s, win, home, order, inv, state)
         # non-factorizable inner policy: the verbatim PR-3 program (one
-        # Table-1 sweep per candidate region, fixed-round admission)
+        # Table-1 sweep per candidate region, fixed-round admission). The
+        # sweep has no rtt_s seam, so a WAN-hop grid must not silently
+        # degrade here — a factorizable-but-factorless inner (a
+        # LearnedPolicy fit without infra, outside a FleetRouter) would
+        # otherwise place hop-broken remotes the gate exists to refuse.
+        if self._has_rtt:
+            raise ValueError(
+                "grid has a non-zero rtt_s but no EnergyFactors are "
+                "available for the WAN-hop QoS gate — route via a "
+                "FleetRouter (which precomputes factors) or give the "
+                "inner policy an infra (LearnedPolicy.fit(..., infra=))")
         s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
         return self._decide_cross_legacy(s, win, home, order, inv, state)
 

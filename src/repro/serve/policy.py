@@ -50,6 +50,26 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       einsum instead of one Table-1 sweep per candidate region.
   ``initial_state(n_regions, n_requests) -> pytree``
       the state to thread into the first ``decide``.
+
+Factorized scoring hooks (optional — what lets a policy ride the einsum
+placement/temporal engines; ``OraclePolicy`` and ``LearnedPolicy`` expose
+both):
+
+  ``scores_from_factors(factors, w, ci, avail, extra_latency=0.0, *,
+      hour=None, interference=None, net_slowdown=None) -> (N, 3)``
+      ``scores`` under arbitrary per-request CI rows. ``extra_latency`` is
+      a remote candidate's WAN hop; the keyword-only tail is the non-CI
+      scoring context — the EXECUTION hour (an absolute horizon hour, which
+      for deferred candidates differs from arrival) plus the shared
+      variance state — that feature-based policies fold into their inputs
+      and CI-only policies ignore.
+  ``pair_scores_from_factors(factors, w, home_ci, cand_ci_dc, avail,
+      extra_latency=None, *, hour=None, interference=None,
+      net_slowdown=None) -> (R, N, 3)``
+      the vectorized form over candidate regions: ``home_ci`` (N, 5) anchors
+      the non-relocating [mobile, edge_net] components, ``cand_ci_dc``
+      (R, N, 3) each candidate's relocating columns, ``extra_latency``
+      (R, N) the per-candidate hop.
 """
 
 from __future__ import annotations
@@ -187,7 +207,10 @@ class OraclePolicy(RoutingPolicy):
 
     def scores_from_factors(self, factors, w: Workload, ci: jax.Array,
                             avail: jax.Array,
-                            extra_latency: jax.Array | float = 0.0
+                            extra_latency: jax.Array | float = 0.0, *,
+                            hour: jax.Array | None = None,
+                            interference: jax.Array | None = None,
+                            net_slowdown: jax.Array | None = None
                             ) -> jax.Array:
         """``scores`` under arbitrary per-request CI rows ``ci`` (N, 5),
         rebuilt from a precomputed ``carbon_model.EnergyFactors`` batch — the
@@ -203,7 +226,13 @@ class OraclePolicy(RoutingPolicy):
         tiers — it must run somewhere, the hop changes nothing). But a
         candidate that is infeasible purely BECAUSE of the hop is refused
         outright (all +inf): a tight-budget request never trades its QoS
-        constraint for a greener remote region."""
+        constraint for a greener remote region.
+
+        The ``hour`` / ``interference`` / ``net_slowdown`` kwargs are the
+        factorized-hook protocol's non-CI scoring context (feature-based
+        policies need them); Table-1 scores depend on CI alone — the
+        variance state already shaped ``factors`` — so they are ignored
+        here."""
         total_cf = carbon_model.total_cf_from_factors(factors, ci)
         ok_base = carbon_model.qos_feasible_from_factors(factors, w) & avail
         ok = carbon_model.qos_feasible_from_factors(
@@ -227,7 +256,10 @@ class OraclePolicy(RoutingPolicy):
     def pair_scores_from_factors(self, factors, w: Workload,
                                  home_ci: jax.Array, cand_ci_dc: jax.Array,
                                  avail: jax.Array,
-                                 extra_latency: jax.Array | None = None
+                                 extra_latency: jax.Array | None = None, *,
+                                 hour: jax.Array | None = None,
+                                 interference: jax.Array | None = None,
+                                 net_slowdown: jax.Array | None = None
                                  ) -> jax.Array:
         """(R, N, 3) ``scores_from_factors`` vectorized over candidate
         regions — the placement/temporal hot path. ``home_ci`` (N, 5) bills
@@ -252,10 +284,8 @@ class OraclePolicy(RoutingPolicy):
         else:
             extra = jnp.asarray(extra_latency, jnp.float32)  # (R, N)
             lat = factors.latency[None] + extra[:, :, None]
-            ok = ((lat <= w.latency_req[None, :, None])
-                  & carbon_model.stream_feasible_batch(factors.t_comm,
-                                                       w)[None]
-                  & avail[None])
+            ok = (carbon_model.pair_qos_feasible_from_factors(
+                factors, w, extra) & avail[None])
         if self.metric == "carbon":
             score = total_cf
         elif self.metric == "latency":
@@ -283,15 +313,56 @@ class OraclePolicy(RoutingPolicy):
 # ---------------------------------------------------------------------------
 
 
-def policy_features(w: Workload, env: Environment,
-                    hour: jax.Array | None = None,
-                    emb_lca: bool = False) -> jax.Array:
-    """(N, 19) raw (un-standardized) feature rows for a live stream.
+def _gate_hop_broken(s: jax.Array, factors, w: Workload,
+                     extra_latency) -> jax.Array:
+    """+inf for candidates whose WAN hop breaks an otherwise-feasible tier.
+
+    Learned scores carry no explicit QoS model (parity with the sweep
+    path), but a remote candidate must not trade a request's latency
+    budget for a greener score: where ``extra_latency`` flips a tier from
+    QoS-feasible to infeasible, that candidate is refused outright — the
+    same refusal the oracle's factorized scorer applies. Tiers infeasible
+    even WITHOUT the hop keep their learned score (capacity was never the
+    hop's fault, and the sweep path never gated them either). No-hop calls
+    (``None`` / literal 0) skip the gate statically. ``s`` is (N, 3) with
+    scalar/(N,) ``extra_latency``, or (R, N, 3) with (R, N); availability
+    must already be masked into ``s`` by the caller."""
+    if extra_latency is None or (
+            not isinstance(extra_latency, jax.Array)
+            and np.ndim(extra_latency) == 0
+            and float(extra_latency) == 0.0):
+        return s
+    ok_base = carbon_model.qos_feasible_from_factors(factors, w)  # (N, 3)
+    if s.ndim == 3:  # (R, N, 3) candidate scores, (R, N) hops
+        ok_hop = carbon_model.pair_qos_feasible_from_factors(
+            factors, w, extra_latency)
+        return jnp.where(ok_base[None] & ~ok_hop, jnp.inf, s)
+    ok_hop = carbon_model.qos_feasible_from_factors(factors, w,
+                                                    extra_latency)
+    return jnp.where(ok_base & ~ok_hop, jnp.inf, s)
+
+
+#: feature-column indices of the 5 CI components (after the 6 workload
+#: columns); the last 3 of them — [edge_dc, core_net, hyper_dc] — are the
+#: components that relocate with a cross-region placement.
+_CI_COLS = slice(6, 11)
+_CI_DC_COLS = slice(8, 11)
+
+
+def feature_rows(w: Workload, ci: jax.Array,
+                 interference: jax.Array | None = None,
+                 net_slowdown: jax.Array | None = None,
+                 hour: jax.Array | None = None,
+                 emb_lca: bool = False) -> jax.Array:
+    """(N, 19) raw (un-standardized) feature rows from explicit CI rows.
 
     Mirrors ``schedulers.build_dataset`` column-for-column — workload
     descriptor, scenario CI/variance, hour-of-day harmonics, embodied-model
     flag — so a model fitted on the offline design space reads the same
-    inputs when routing online.
+    inputs when routing online. ``ci`` is (5,) shared or (N, 5) per-request
+    — the seam that lets factorized policies re-featurize arbitrary
+    candidate (region, hour) CI rows without an Environment in hand.
+    ``hour`` may be any absolute horizon hour; the harmonics wrap daily.
     """
     n = w.flops.shape[0]
     f_w = jnp.stack([
@@ -304,18 +375,30 @@ def policy_features(w: Workload, env: Environment,
     ], axis=-1)
     bcast = lambda a, k: jnp.broadcast_to(
         jnp.asarray(a, jnp.float32).reshape(-1, k), (n, k))
+    if interference is None:
+        interference = jnp.ones((3,), jnp.float32)
+    if net_slowdown is None:
+        net_slowdown = jnp.ones((2,), jnp.float32)
     h = (jnp.zeros((n,), jnp.float32) if hour is None
          else jnp.asarray(hour, jnp.float32))
     ang = 2.0 * jnp.pi * h / 24.0
     return jnp.concatenate([
         f_w,
-        bcast(env.ci, 5) / 100.0,
-        bcast(env.interference, 3),
-        bcast(env.net_slowdown, 2),
+        bcast(ci, 5) / 100.0,
+        bcast(interference, 3),
+        bcast(net_slowdown, 2),
         jnp.sin(ang)[:, None],
         jnp.cos(ang)[:, None],
         jnp.full((n, 1), 1.0 if emb_lca else 0.0, jnp.float32),
     ], axis=-1)
+
+
+def policy_features(w: Workload, env: Environment,
+                    hour: jax.Array | None = None,
+                    emb_lca: bool = False) -> jax.Array:
+    """``feature_rows`` of a live stream's Environment (the sweep path)."""
+    return feature_rows(w, env.ci, env.interference, env.net_slowdown,
+                        hour, emb_lca)
 
 
 @dataclasses.dataclass
@@ -327,6 +410,20 @@ class LearnedPolicy(RoutingPolicy):
     ``jax_scores(params, X)`` becomes the jitted per-request scorer. The
     training dataset's feature standardization statistics travel along so
     live feature rows land in the same input distribution.
+
+    Fitted schedulers also expose the factorized scoring hooks
+    (``scores_from_factors`` / ``pair_scores_from_factors``), so a
+    ``LearnedPolicy`` plugs into the einsum placement / temporal engines
+    exactly like the Table-1 oracle: a candidate (region, hour) placement
+    is scored by re-featurizing its CI row (and execution hour) — no
+    Table-1 sweep anywhere. For CI-linear schedulers (``ci_linear`` on the
+    scheduler class, e.g. classification) the candidate axis collapses to
+    ONE einsum against probed per-CI-column sensitivities (``ci_sens``);
+    non-linear scorers (RBF-GP, quadratic RL features) re-run inference
+    per candidate region, still at one feature build per candidate.
+    ``infra`` is optional and only needed to self-compute an
+    ``EnergyFactors`` batch outside a ``FleetRouter`` (which precomputes
+    factors for ``wants_factors`` wrappers).
     """
 
     params: Any
@@ -335,26 +432,106 @@ class LearnedPolicy(RoutingPolicy):
     feat_std: jax.Array
     emb_lca: bool = False
     name: str = "learned"
+    infra: Any = None
+    #: (F, 3) score sensitivity to each standardized feature column, probed
+    #: at fit time for CI-linear schedulers; None = generic per-candidate
+    #: inference in the pair hook.
+    ci_sens: jax.Array | None = None
 
     @classmethod
     def fit(cls, scheduler, train: SchedulerDataset,
-            emb_lca: bool = False) -> "LearnedPolicy":
+            emb_lca: bool = False, infra: Any = None) -> "LearnedPolicy":
         if train.feat_mean is None or train.feat_std is None:
             raise ValueError(
                 "dataset has no feature statistics — rebuild it with "
                 "schedulers.build_dataset (feat_mean/feat_std are required "
                 "to featurize live streams)")
         params = jax.tree.map(jnp.asarray, scheduler.fit_params(train))
+        ci_sens = None
+        if getattr(scheduler, "ci_linear", False):
+            # probe the (affine) scorer's per-feature sensitivities once:
+            # score(X) = score(0) + X @ sens for a CI-linear scheduler, so
+            # candidate CI deltas become one einsum at decision time
+            n_feat = int(np.asarray(train.feat_mean).shape[0])
+            probes = jnp.concatenate(
+                [jnp.zeros((1, n_feat), jnp.float32),
+                 jnp.eye(n_feat, dtype=jnp.float32)])
+            s = type(scheduler).jax_scores(params, probes)
+            ci_sens = s[1:] - s[:1]
         return cls(name=f"learned-{scheduler.name}", params=params,
                    score_fn=type(scheduler).jax_scores,
                    feat_mean=jnp.asarray(train.feat_mean, jnp.float32),
                    feat_std=jnp.asarray(train.feat_std, jnp.float32),
-                   emb_lca=emb_lca)
+                   emb_lca=emb_lca, infra=infra, ci_sens=ci_sens)
+
+    def _score_rows(self, w, ci, interference, net_slowdown, hour
+                    ) -> jax.Array:
+        """(N, 3) raw scheduler scores under explicit CI rows + context."""
+        X = feature_rows(w, ci, interference, net_slowdown, hour,
+                         self.emb_lca)
+        X = (X - self.feat_mean) / self.feat_std
+        return self.score_fn(self.params, X)
 
     def scores(self, w, env, avail, *, hour=None):
-        X = policy_features(w, env, hour, self.emb_lca)
-        X = (X - self.feat_mean) / self.feat_std
-        return jnp.where(avail, self.score_fn(self.params, X), jnp.inf)
+        return jnp.where(
+            avail,
+            self._score_rows(w, env.ci, env.interference, env.net_slowdown,
+                             hour),
+            jnp.inf)
+
+    def scores_from_factors(self, factors, w: Workload, ci: jax.Array,
+                            avail: jax.Array,
+                            extra_latency: jax.Array | float = 0.0, *,
+                            hour: jax.Array | None = None,
+                            interference: jax.Array | None = None,
+                            net_slowdown: jax.Array | None = None
+                            ) -> jax.Array:
+        """``scores`` under arbitrary per-request CI rows — the factorized
+        placement/temporal hook. With no WAN hop this IS the sweep path
+        (same features, same scorer — parity-tested); ``factors`` only
+        enters through the hop gate: a candidate whose ``extra_latency``
+        breaks an otherwise-QoS-feasible tier is refused outright (+inf),
+        matching the oracle's refusal semantics — the learned score itself
+        stays feasibility-free, exactly like the sweep path."""
+        s = jnp.where(
+            avail,
+            self._score_rows(w, ci, interference, net_slowdown, hour),
+            jnp.inf)
+        return _gate_hop_broken(s, factors, w, extra_latency)
+
+    def pair_scores_from_factors(self, factors, w: Workload,
+                                 home_ci: jax.Array, cand_ci_dc: jax.Array,
+                                 avail: jax.Array,
+                                 extra_latency: jax.Array | None = None, *,
+                                 hour: jax.Array | None = None,
+                                 interference: jax.Array | None = None,
+                                 net_slowdown: jax.Array | None = None
+                                 ) -> jax.Array:
+        """(R, N, 3) ``scores_from_factors`` over candidate regions.
+        ``home_ci`` (N, 5) anchors the non-relocating [mobile, edge_net]
+        components; ``cand_ci_dc`` (R, N, 3) carries each candidate's
+        relocating CI columns. CI-linear schedulers score the home row
+        once and add ``delta_ci @ ci_sens`` (one einsum — the learned
+        analogue of the oracle's ``op_unit`` einsum); others re-run
+        inference per candidate region."""
+        if self.ci_sens is not None:
+            s0 = self._score_rows(w, home_ci, interference, net_slowdown,
+                                  hour)  # (N, 3)
+            # features carry ci/100 standardized by feat_std: a candidate
+            # differs from home only in the relocating CI columns
+            scale = 1.0 / (100.0 * self.feat_std[_CI_DC_COLS])  # (3,)
+            delta = (cand_ci_dc - home_ci[None, :, 2:]) * scale  # (R, N, 3)
+            s = s0[None] + jnp.einsum("rnc,ct->rnt", delta,
+                                      self.ci_sens[_CI_DC_COLS])
+        else:
+            def one_region(ci_dc):
+                ci_mixed = jnp.concatenate([home_ci[:, :2], ci_dc], axis=1)
+                return self._score_rows(w, ci_mixed, interference,
+                                        net_slowdown, hour)
+
+            s = jax.vmap(one_region)(cand_ci_dc)  # (R, N, 3)
+        s = jnp.where(avail[None], s, jnp.inf)
+        return _gate_hop_broken(s, factors, w, extra_latency)
 
 
 # ---------------------------------------------------------------------------

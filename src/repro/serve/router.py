@@ -384,7 +384,12 @@ class FleetRouter:
         elif self.grid.n_regions != len(self.regions):
             raise ValueError(f"grid covers {self.grid.n_regions} regions, "
                              f"router has {len(self.regions)}")
-        self._ci_table = self.grid.table  # (R, 24, 5)
+        self._ci_table = self.grid.table  # (R, H, 5)
+        # arrival times index the grid's rolling horizon by ABSOLUTE hour
+        # (wrapping only at the horizon end), so a multi-day grid gives day
+        # two its own CI rows and capacity cells; a single-day grid keeps
+        # the historical hour-of-day (% 24) behaviour bit-for-bit.
+        self._horizon_h = int(self._ci_table.shape[1])
 
         if self.policy is None:
             self.policy = OraclePolicy(self._infra)
@@ -542,16 +547,20 @@ class FleetRouter:
     def env_at(self, region: int, hour: int) -> Environment:
         """The exact Environment a request in ``region`` at ``hour`` sees
         (the scalar-parity hook: GreenScaleRouter.route against this env
-        must reproduce the fleet decision). Indexes the cached
-        ``CarbonGrid`` table — ``grid.table`` is recomputed per access."""
-        return Environment(ci=self._ci_table[region, hour % 24],
+        must reproduce the fleet decision). ``hour`` is an absolute horizon
+        hour, wrapped modulo the grid's horizon (== the historical % 24 on
+        a single-day grid). Indexes the cached ``CarbonGrid`` table —
+        ``grid.table`` is recomputed per access."""
+        return Environment(ci=self._ci_table[region, hour % self._horizon_h],
                            interference=self._interference,
                            net_slowdown=self._net_slowdown)
 
     def route_stream(self, batch: RequestBatch, region: np.ndarray,
                      t_hours: np.ndarray) -> FleetRouteResult:
         """Route a request stream. ``region`` (N,) int region indices,
-        ``t_hours`` (N,) arrival times in hours (wrapped modulo 24)."""
+        ``t_hours`` (N,) arrival times in absolute hours since the horizon
+        start (wrapped modulo the grid horizon — 24 on the default
+        single-day grid, ``n_days * 24`` on a rolling multi-day one)."""
         return self.route_stream_with_state(batch, region, t_hours)[0]
 
     def route_stream_with_state(
@@ -559,7 +568,8 @@ class FleetRouter:
             t_hours: np.ndarray) -> tuple[FleetRouteResult, object]:
         """``route_stream`` + the policy's final state (e.g. the
         ``PlacementState`` counters/shed mask of a ``PlacementPolicy``)."""
-        hour_np = (np.floor(np.asarray(t_hours)) % 24).astype(np.int32)
+        hour_np = (np.floor(np.asarray(t_hours))
+                   % self._horizon_h).astype(np.int32)
         region_np = np.asarray(region).astype(np.int32)
         # stream-order hint: stable radix sort by arrival window — or by
         # (window, home region) when the policy wants finer segments
@@ -572,7 +582,8 @@ class FleetRouter:
         if order_key is None:
             order = inv_order = None
         else:
-            win_np = hour_np % getattr(self.policy, "n_windows", 24)
+            n_win = getattr(self.policy, "n_windows", None) or self._horizon_h
+            win_np = hour_np % n_win
             key = (win_np * len(self.regions) + region_np
                    if order_key == "window_region" else win_np)
             order_np = np.argsort(key, kind="stable").astype(np.int32)

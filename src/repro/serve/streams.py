@@ -112,3 +112,29 @@ def deferrable_stream(
         slack_hours=slack,
         latency_budget_s=np.where(is_batch, 120.0, batch.latency_budget_s)),
         region, t_hours)
+
+
+def deferrable_stream_multiday(
+    n: int, n_regions: int, n_days: int = 2, seed: int = 0,
+    batch_frac: float = 0.5,
+    slack_range_h: tuple[int, int] = (6, 16),
+) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
+    """``deferrable_stream`` spread over a rolling ``n_days`` horizon:
+    every request keeps the per-region staggered diurnal arrival pattern
+    but lands on a uniformly drawn day, so arrival times are ABSOLUTE
+    hours in ``[0, n_days * 24)`` and the evening batch slice's deadline
+    windows cross midnight into the NEXT day's capacity budgets — the
+    scenario the multi-day ``CarbonGrid`` horizon exists for (a modulo-24
+    wrap would alias those windows into already-spent day-one cells).
+    Route it against a grid whose horizon covers the whole stream PLUS its
+    deferral allowance — ``grid n_days >= this n_days + 1`` when
+    ``max_defer_h`` can reach past the last day's midnight — so no
+    deadline window wraps off the rolling horizon's end (the horizon wraps
+    modulo H, and a wrapped window would re-enter day one's cells).
+    """
+    batch, region, t_hours = deferrable_stream(
+        n, n_regions, seed=seed, batch_frac=batch_frac,
+        slack_range_h=slack_range_h)
+    rng = np.random.default_rng(seed + 202)
+    day = rng.integers(0, n_days, n)
+    return batch, region, t_hours + 24.0 * day

@@ -31,7 +31,17 @@ instead of the evening gas peak.
   * Scoring runs on the factorized evaluator (``carbon_model.EnergyFactors``)
     exclusively: one Table-1 evaluation per batch, every candidate hour an
     einsum against ``CarbonGrid.table``. The inner policy must expose
-    ``scores_from_factors`` (the Table-1 oracle family does).
+    ``scores_from_factors`` — the Table-1 oracle family does, and so do
+    fitted ``LearnedPolicy`` schedulers (their features are CI rows plus
+    CI-free workload context, so candidate (region, hour) placements are
+    re-featurized — an einsum for CI-linear models — instead of re-swept).
+  * The time axis is the grid's rolling multi-day horizon: candidate hours
+    and capacity windows index ABSOLUTE hours, so deferral across midnight
+    is scored at day two's CI and charged to day two's budgets — a
+    repeated-diurnal multi-day grid reproduces the single-day decisions
+    whenever no deadline window crosses midnight (parity-tested), and
+    differs exactly where the old modulo-24 wrap aliased day two into
+    day one.
 
 Zero slack degenerates to ``PlacementPolicy`` exactly: only ``d = 0``
 candidates are finite, the prior-count matrix is empty, and the decisions
@@ -89,7 +99,17 @@ class TemporalPolicy(PlacementPolicy):
 
     ``max_defer_h`` is the static deferral horizon (bounds the candidate
     enumeration; must be < ``n_windows`` so distinct defers land in distinct
-    windows). Admission runs skip-full best-open attempts under a
+    windows). On a multi-day grid the windows span the grid's rolling
+    horizon (one per absolute hour by default), so a deferral window that
+    crosses midnight is scored at DAY TWO's CI and admitted against day
+    two's capacity cells — no modulo-24 aliasing into day one's spent
+    budgets, and ``max_defer_h`` may exceed the hours left in the arrival
+    day. The horizon is ROLLING: candidates past its last hour wrap to
+    hour 0 (on a repeated-diurnal grid that is the same CI but shares the
+    first day's cells again), so size the grid to cover the stream —
+    ``n_days * 24 >= last arrival + max_defer_h`` keeps every deadline
+    window inside the horizon; a non-wrapping tail is a recorded ROADMAP
+    follow-up. Admission runs skip-full best-open attempts under a
     ``lax.while_loop`` (same machinery as the cross-region
     ``PlacementPolicy``): exhaustive — a routable request is shed iff every
     candidate cell within its deadline is at cap.
@@ -104,17 +124,30 @@ class TemporalPolicy(PlacementPolicy):
             raise ValueError(
                 "TemporalPolicy scores candidate hours via the factorized "
                 "evaluator — the inner policy must expose "
-                "scores_from_factors (OraclePolicy does) and factorized "
-                "must stay True")
-        if HOURS_PER_DAY % self.n_windows != 0:
+                "scores_from_factors (OraclePolicy and LearnedPolicy do) "
+                "and factorized must stay True")
+        if self.n_windows is not None:
+            self._check_windows(self.n_windows)
+
+    def _check_windows(self, n_windows: int) -> None:
+        """Window-count checks that don't need the grid: an explicit count
+        is validated eagerly at construction, the horizon-derived default
+        when the grid binds."""
+        if (HOURS_PER_DAY % n_windows != 0
+                and n_windows % HOURS_PER_DAY != 0):
             raise ValueError(
-                f"n_windows must divide {HOURS_PER_DAY} so deferred hours "
-                f"map consistently onto capacity windows, got "
-                f"{self.n_windows}")
-        if not 0 <= self.max_defer_h < self.n_windows:
+                f"n_windows must divide {HOURS_PER_DAY} (sub-daily "
+                f"windows) or be a multiple of it (multi-day horizons) so "
+                f"deferred hours map consistently onto capacity windows, "
+                f"got {n_windows}")
+        if not 0 <= self.max_defer_h < n_windows:
             raise ValueError(
                 f"max_defer_h must be in [0, n_windows), got "
-                f"{self.max_defer_h} with n_windows={self.n_windows}")
+                f"{self.max_defer_h} with n_windows={n_windows}")
+
+    def _check_grid(self, grid) -> None:
+        super()._check_grid(grid)  # resolves a None n_windows -> horizon
+        self._check_windows(self.n_windows)
 
     @property
     def wants_factors(self) -> bool:
@@ -134,7 +167,7 @@ class TemporalPolicy(PlacementPolicy):
             exec_hour=jnp.zeros((n_requests,), jnp.int32),
             defer_hours=jnp.zeros((n_requests,), jnp.int32))
 
-    def candidate_scores(self, factors, w, avail, home: jax.Array,
+    def candidate_scores(self, factors, w, env, avail, home: jax.Array,
                          hr: jax.Array) -> jax.Array:
         """Scores of every (defer[, region], tier) candidate: the inner
         policy's factorized score under the candidate region's CI at hour
@@ -143,25 +176,33 @@ class TemporalPolicy(PlacementPolicy):
         work actually runs) — masked/penalized like ``pair_scores``.
         (S+1, N, R, 3) with cross-region spill; (S+1, N, 3) in tier-only
         mode, where home is the only candidate and the adjacency/penalty/
-        remote-mobile masks are no-ops, so only the home row is scored."""
-        table = self.grid.table  # (R, 24, 5)
+        remote-mobile masks are no-ops, so only the home row is scored.
+        Candidate hours wrap at the GRID HORIZON, not the day: on a
+        multi-day grid a midnight-crossing defer reads day two's CI rows.
+        ``env`` supplies the non-CI scoring context (interference /
+        net_slowdown) feature-based inner policies need; each candidate is
+        scored with its own execution hour."""
+        table = self.grid.table  # (R, H, 5)
         table_dc = table[..., 2:]  # relocating [edge_dc, core_net, hyper_dc]
         extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
+        ctx = dict(interference=env.interference,
+                   net_slowdown=env.net_slowdown)
 
-        def scores_at(he_d):  # (N,) hour-of-day at execution
+        def scores_at(he_d):  # (N,) absolute horizon hour at execution
             home_ci = table[home, he_d]  # (N, 5)
             if self._diag_only:
                 ci_dc = table_dc[home, he_d][None]  # (1, N, 3): home only
                 return self._inner_pair_scores(factors, w, home_ci, ci_dc,
-                                               avail, None)[0]  # (N, 3)
+                                               avail, None, hour=he_d,
+                                               **ctx)[0]  # (N, 3)
             ci_dc = table_dc[:, he_d, :]  # (R, N, 3)
             s = self._inner_pair_scores(factors, w, home_ci, ci_dc, avail,
-                                        extra)  # (R, N, 3)
+                                        extra, hour=he_d, **ctx)  # (R, N, 3)
             return self._mask_pairs(jnp.moveaxis(s, 0, 1), home)
 
         he = (hr[None, :] + jnp.arange(self.max_defer_h + 1,
                                        dtype=hr.dtype)[:, None]) \
-            % HOURS_PER_DAY  # (S+1, N)
+            % self._horizon_h  # (S+1, N)
         return jax.vmap(scores_at)(he)
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
@@ -180,11 +221,18 @@ class TemporalPolicy(PlacementPolicy):
         slack_w = (jnp.zeros((n,), jnp.int32) if slack is None
                    else jnp.clip(jnp.asarray(slack, jnp.int32), 0, S))
         if factors is None:
+            infra = getattr(self.inner, "infra", None)
+            if infra is None:
+                raise ValueError(
+                    "TemporalPolicy needs an EnergyFactors batch: route "
+                    "via a FleetRouter (which precomputes factors for "
+                    "wants_factors policies) or give the inner policy an "
+                    "infra (LearnedPolicy.fit(..., infra=...))")
             factors = carbon_model.energy_factors_batch(
-                w, self.inner.infra, env.interference, env.net_slowdown)
+                w, infra, env.interference, env.net_slowdown)
 
         # --- candidate scores over (defer[, region], tier) ----------------
-        s_all = self.candidate_scores(factors, w, avail, home, hr)
+        s_all = self.candidate_scores(factors, w, env, avail, home, hr)
         d_ok = jnp.arange(S + 1)[:, None] <= slack_w[None, :]  # (S+1, N)
         if self._diag_only:
             # home is the only candidate region ((S+1, N, 3) scores): the
@@ -324,7 +372,7 @@ class TemporalPolicy(PlacementPolicy):
         exec_region = jnp.where(shed_s, home_s, exec_pair // N_TARGETS)[inv]
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
         defer = exec_d.astype(jnp.int32)[inv]
-        exec_hour = ((hr_s + exec_d) % HOURS_PER_DAY).astype(jnp.int32)[inv]
+        exec_hour = ((hr_s + exec_d) % self._horizon_h).astype(jnp.int32)[inv]
         counts = used.reshape(W, n_regions, N_TARGETS).sum(axis=0)
         shed_pair = (jax.nn.one_hot(pair0, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(

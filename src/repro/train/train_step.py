@@ -18,7 +18,6 @@ B/k while keeping one optimizer step per global batch.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

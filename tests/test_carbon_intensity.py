@@ -1,11 +1,19 @@
-"""Tests for grid traces, charging behaviour, uncertainty injection."""
+"""Tests for grid traces, charging behaviour, uncertainty injection, and
+the rolling multi-day CarbonGrid horizon."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import ChargingBehavior, Grid, grid_trace, mobile_carbon_intensity
-from repro.core.carbon_intensity import all_grid_traces, ci_of_mix, perturb_mix
+from repro.core.carbon_intensity import (
+    DEFAULT_REGIONS,
+    CarbonGrid,
+    all_grid_traces,
+    ci_of_mix,
+    perturb_mix,
+)
 from repro.core.constants import SOURCE_CI_LIST
 
 
@@ -72,3 +80,68 @@ def test_perturb_mix_statistics():
 def test_all_grid_traces_stacked():
     t = all_grid_traces()
     assert t.ci_hourly.shape == (len(Grid), 24)
+
+
+class TestMultiDayGrid:
+    """The (R, H, 5) rolling horizon table (ISSUE-5 tentpole)."""
+
+    def test_default_is_single_day(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        assert g.horizon_h == 24 and g.n_days == 1
+        assert g.table.shape == (len(DEFAULT_REGIONS), 24, 5)
+
+    def test_repeated_diurnal_tiles_bit_for_bit(self):
+        g1 = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        g3 = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=3)
+        assert g3.horizon_h == 72 and g3.n_days == 3
+        t1, t3 = np.asarray(g1.table), np.asarray(g3.table)
+        for d in range(3):
+            np.testing.assert_array_equal(t3[:, 24 * d:24 * (d + 1)], t1)
+        # the flat (R,) components and the topology matrices are untouched
+        np.testing.assert_array_equal(np.asarray(g3.ci_mobile),
+                                      np.asarray(g1.ci_mobile))
+        np.testing.assert_array_equal(np.asarray(g3.adjacency),
+                                      np.asarray(g1.adjacency))
+
+    def test_repeat_method_matches_constructor(self):
+        a = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=2,
+                                    day_scale=(1.0, 0.8))
+        b = CarbonGrid.from_regions(DEFAULT_REGIONS).repeat(
+            2, day_scale=(1.0, 0.8))
+        np.testing.assert_array_equal(np.asarray(a.ci_hourly),
+                                      np.asarray(b.ci_hourly))
+        np.testing.assert_array_equal(np.asarray(a.pue), np.asarray(b.pue))
+
+    def test_day_scale_scales_grid_ci_only(self):
+        g1 = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        g2 = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=2,
+                                     day_scale=(1.0, 0.5))
+        ci = np.asarray(g2.ci_hourly)
+        np.testing.assert_allclose(ci[:, 24:], 0.5 * ci[:, :24], rtol=1e-6)
+        # device battery / core path stay flat daily values
+        np.testing.assert_array_equal(np.asarray(g2.ci_mobile),
+                                      np.asarray(g1.ci_mobile))
+        np.testing.assert_array_equal(np.asarray(g2.ci_core),
+                                      np.asarray(g1.ci_core))
+        # in the table, only the grid-driven components scale on day two
+        t = np.asarray(g2.table)
+        np.testing.assert_allclose(t[..., 24:, 2], 0.5 * t[..., :24, 2],
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(t[..., 24:, 0], t[..., :24, 0])
+        np.testing.assert_array_equal(t[..., 24:, 3], t[..., :24, 3])
+
+    def test_pue_tiles_with_the_horizon(self):
+        pue = 1.0 + np.arange(24, dtype=np.float32) / 100.0
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS, pue=pue, n_days=2)
+        p = np.asarray(g.pue)
+        assert p.shape == (len(DEFAULT_REGIONS), 48)
+        np.testing.assert_array_equal(p[:, 24:], p[:, :24])
+
+    def test_repeat_validation(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        with pytest.raises(ValueError, match="n_days"):
+            g.repeat(0)
+        with pytest.raises(ValueError, match="day_scale"):
+            g.repeat(2, day_scale=(1.0,))
+        with pytest.raises(ValueError, match="positive"):
+            g.repeat(2, day_scale=(1.0, -0.5))

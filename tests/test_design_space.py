@@ -1,6 +1,5 @@
 """Design-space explorer tests: vmapped grid == pointwise evaluation."""
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (

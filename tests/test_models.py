@@ -10,15 +10,13 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.configs.base import Family, ShapeConfig, ShapeKind
+from repro.configs.base import ShapeConfig, ShapeKind
 from repro.data import batch_for
 from repro.models import (
     count_params,
     decode_step,
     forward,
-    init_decode_state,
     init_params,
-    loss_fn,
     prefill,
 )
 from repro.models.attention import _sdpa_dense, sdpa

@@ -18,7 +18,7 @@ from repro.serve import (
     PlacementPolicy,
     RequestBatch,
 )
-from repro.serve.streams import diurnal_stream, multi_region_stream
+from repro.serve.streams import multi_region_stream
 
 ARCH = "h2o-danube-1.8b"
 N_REGIONS = len(DEFAULT_REGIONS)

@@ -4,12 +4,10 @@ import numpy as np
 import pytest
 
 from repro.core import build_scenarios, explore, paper_fleet
-from repro.core.carbon_intensity import ChargingBehavior, Grid
 from repro.core.design_space import ScenarioAxes
 from repro.core.schedulers import (
     BOScheduler,
     ClassificationScheduler,
-    EnergyAwareScheduler,
     OracleScheduler,
     RLScheduler,
     RegressionScheduler,

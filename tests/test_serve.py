@@ -3,10 +3,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
-from repro.core import Grid, grid_trace
 from repro.core.carbon_model import Environment
 from repro.core.constants import Target
 from repro.models import init_params

@@ -5,11 +5,10 @@ import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, param_specs, get_shape
+from repro.configs import get_config, param_specs
 from repro.launch.dryrun import collective_bytes
 from repro.sharding.rules import (
     MeshAxes,

@@ -4,6 +4,9 @@ acceptance), deadline/capacity conservation (property-based), the
 single-evaluation regression probe for the factorized hot path, and the
 WAN-hop (rtt_s) QoS satellite."""
 
+import dataclasses
+import functools
+
 import hypothesis
 import hypothesis.strategies as st
 import numpy as np
@@ -12,6 +15,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import carbon_model
 from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid
+from repro.core.schedulers import ClassificationScheduler
 from repro.serve import (
     FleetRouter,
     LearnedPolicy,
@@ -20,10 +24,32 @@ from repro.serve import (
     RequestBatch,
     TemporalPolicy,
 )
-from repro.serve.streams import deferrable_stream, multi_region_stream
+from repro.serve.streams import (
+    deferrable_stream,
+    deferrable_stream_multiday,
+    multi_region_stream,
+)
 
 ARCH = "h2o-danube-1.8b"
 N_REGIONS = len(DEFAULT_REGIONS)
+
+
+@functools.lru_cache(maxsize=None)
+def _train_dataset():
+    """Small offline design-space dataset for fitting learned policies."""
+    from repro.core import build_scenarios, explore, paper_fleet
+    from repro.core.design_space import ScenarioAxes
+    from repro.core.schedulers import build_dataset
+    from repro.core.workloads import ALL_PAPER_WORKLOADS
+
+    axes = ScenarioAxes(hours=tuple(range(0, 24, 6)))
+    table = build_scenarios(paper_fleet(), axes)
+    res = explore(ALL_PAPER_WORKLOADS, table)
+    return build_dataset(ALL_PAPER_WORKLOADS, res, table).split()[0]
+
+
+def _learned_policy(sched_cls=ClassificationScheduler, **kw):
+    return LearnedPolicy.fit(sched_cls(), _train_dataset(), **kw)
 
 
 def _stream(n: int, seed: int = 0, n_regions: int = N_REGIONS,
@@ -73,8 +99,30 @@ class TestValidation:
             TemporalPolicy(OraclePolicy(base.infra), caps, n_windows=12,
                            max_defer_h=12)
 
-    def test_learned_inner_has_no_factor_hook(self, base):
-        assert not hasattr(LearnedPolicy, "scores_from_factors")
+    def test_learned_inner_rides_the_factorized_engine(self, base):
+        """ISSUE-5: LearnedPolicy exposes the factorized hooks, so it is a
+        legal TemporalPolicy inner (the PR-4 rejection is retired)."""
+        assert hasattr(LearnedPolicy, "scores_from_factors")
+        assert hasattr(LearnedPolicy, "pair_scores_from_factors")
+        caps = np.full((N_REGIONS, 3), np.inf)
+        pol = TemporalPolicy(_learned_policy(), caps, max_defer_h=4)
+        assert pol.wants_factors
+
+    def test_windows_default_to_grid_horizon(self, base, xgrid):
+        caps = np.full((N_REGIONS, 3), np.inf)
+        pol = TemporalPolicy(OraclePolicy(base.infra), caps, max_defer_h=4)
+        assert pol.n_windows is None
+        pol.bind_grid(xgrid)
+        assert pol.n_windows == 24
+        pol2 = TemporalPolicy(OraclePolicy(base.infra), caps, max_defer_h=30)
+        pol2.bind_grid(CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2))
+        assert pol2.n_windows == 48  # > 24h deferral is legal on 2 days
+
+    def test_rejects_defer_beyond_resolved_horizon(self, base, xgrid):
+        caps = np.full((N_REGIONS, 3), np.inf)
+        pol = TemporalPolicy(OraclePolicy(base.infra), caps, max_defer_h=30)
+        with pytest.raises(ValueError, match="max_defer_h"):
+            pol.bind_grid(xgrid)  # 30h deferral needs > 1 day of windows
 
 
 class TestZeroSlackParity:
@@ -470,3 +518,303 @@ class TestConservation:
                     assert got <= caps[r, t], (h, r, t, got)
         # spill only along adjacency edges
         assert adjacency[region[~shed], ex[~shed]].all()
+
+
+class TestMultiDayHorizon:
+    """ISSUE-5 tentpole: the rolling multi-day CarbonGrid horizon.
+
+    A repeated-diurnal multi-day grid reproduces the single-day decisions
+    bit-for-bit wherever no deadline window crosses midnight, and deferral
+    past midnight charges DAY TWO's capacity cells instead of aliasing
+    modulo 24 into day one's spent budgets (the bug this PR fixes)."""
+
+    def test_repeated_diurnal_parity_bit_for_bit(self, cfg, base):
+        """Day-one-confined stream (arrival + slack < 24): 2-day repeated
+        grid == single-day grid on every decision and carbon gram."""
+        n = 2500
+        batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=0,
+                                                   slack_range_h=(2, 5))
+        t_hours = np.clip(t_hours, 0.0, 18.0)  # deadline windows < 24h
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(1.0, 0.3 * n / (N_REGIONS * 24))
+        g1 = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        g2 = CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2)
+        f1 = FleetRouter(cfg, grid=g1, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=5))
+        f2 = FleetRouter(cfg, grid=g2, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=5))
+        r1, s1 = f1.route_stream_with_state(batch, region, t_hours)
+        r2, s2 = f2.route_stream_with_state(batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(r1.target),
+                                      np.asarray(r2.target))
+        np.testing.assert_array_equal(np.asarray(s1.shed),
+                                      np.asarray(s2.shed))
+        np.testing.assert_array_equal(np.asarray(s1.exec_hour),
+                                      np.asarray(s2.exec_hour))
+        np.testing.assert_array_equal(np.asarray(r1.exec_region),
+                                      np.asarray(r2.exec_region))
+        np.testing.assert_array_equal(np.asarray(r1.carbon_g),
+                                      np.asarray(r2.carbon_g))
+        assert int(r1.shed_count) == int(r2.shed_count) > 0
+
+    @staticmethod
+    def _midnight_scenario():
+        """One region, one open tier: A fills day-one hours 0-1, C fills
+        hour 23, B arrives at 23.5 with 2h slack — every candidate of B
+        (hours 23, 24, 25) is full under a modulo-24 wrap, but only hour
+        23 is genuinely full on the true time axis."""
+        cap = 10.0
+        caps = np.array([[np.inf, cap, np.inf]])
+
+        def mk(n, slack):
+            return RequestBatch(
+                prompt_tokens=np.full(n, 4096.0),  # never fits on-device
+                max_new_tokens=np.full(n, 64.0),
+                latency_budget_s=np.full(n, 120.0),
+                bytes_per_token=np.full(n, 4.0),
+                available=np.tile([False, True, False], (n, 1)),
+                slack_hours=np.full(n, float(slack)))
+
+        nA, nB, nC = 20, 8, 10
+        groups = [mk(nA, 0), mk(nB, 2), mk(nC, 0)]
+        batch = RequestBatch(*[
+            np.concatenate([getattr(g, f.name) for g in groups])
+            for f in dataclasses.fields(RequestBatch)])
+        t = np.concatenate([np.repeat([0.5, 1.5], nA // 2),
+                            np.full(nB, 23.5), np.full(nC, 23.5)])
+        region = np.zeros(nA + nB + nC, np.int64)
+        b_rows = slice(nA, nA + nB)
+        return caps, batch, region, t, b_rows
+
+    def test_day_boundary_aliasing_regression(self, cfg, base):
+        """The modulo-24 capacity bug, demonstrated and fixed: on a
+        single-day grid B's past-midnight candidates alias into day one's
+        spent hour-0/1 cells and B is shed; on the 2-day grid the same
+        deferral lands in day-two cells (fresh budgets) and routes."""
+        caps, batch, region, t, b_rows = self._midnight_scenario()
+        regions = DEFAULT_REGIONS[:1]
+
+        def route(grid):
+            fr = FleetRouter(cfg, regions=regions, grid=grid,
+                             policy=TemporalPolicy(OraclePolicy(base.infra),
+                                                   caps, max_defer_h=2))
+            return fr.route_stream_with_state(batch, region, t)
+
+        r1, s1 = route(CarbonGrid.from_regions(regions))
+        # single-day horizon: aliasing shows as shed — B's candidates all
+        # map onto full cells even though tomorrow's cells are empty
+        assert int(np.asarray(s1.shed)[b_rows].sum()) == len(batch) - 30 == 8
+
+        r2, s2 = route(CarbonGrid.from_regions(regions, n_days=2))
+        shed_b = np.asarray(s2.shed)[b_rows]
+        eh_b = np.asarray(s2.exec_hour)[b_rows]
+        assert not shed_b.any()
+        assert (eh_b >= 24).all()  # executed in day-two cells
+        # day-one cells must NOT be over cap: A kept its 20 slots, C its 10
+        assert int(r2.shed_count) == 0
+        counts = np.asarray(r2.counts)
+        assert counts.sum() == len(batch)
+
+    def test_cleaner_day_two_attracts_deferral(self, cfg, base):
+        """day_scale makes tomorrow greener: uncapped joint deferral on the
+        scaled grid defers at least as much carbon away as the repeated
+        grid, and midnight-crossing deferrals exist."""
+        n = 2000
+        batch, region, t_hours = deferrable_stream_multiday(
+            n, N_REGIONS, n_days=2, seed=3)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        g_flat = CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2)
+        g_clean = CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2,
+                                             day_scale=(1.0, 0.8))
+        out = {}
+        for name, g in (("flat", g_flat), ("clean", g_clean)):
+            fr = FleetRouter(cfg, grid=g, policy=TemporalPolicy(
+                OraclePolicy(base.infra), caps, max_defer_h=16))
+            out[name] = fr.route_stream_with_state(batch, region, t_hours)
+        res, state = out["clean"]
+        arr = np.floor(t_hours).astype(int) % 48
+        eh = np.asarray(state.exec_hour)
+        crossed = ((arr < 24) & (eh >= 24) & ~np.asarray(state.shed)).sum()
+        assert int(crossed) > 0
+        assert float(res.routed_carbon_g) < float(
+            out["flat"][0].routed_carbon_g)
+
+    @hypothesis.settings(max_examples=5, deadline=None)
+    @hypothesis.given(
+        caps_flat=st.lists(
+            st.one_of(st.integers(0, 4), st.just(np.inf)),
+            min_size=6, max_size=6),
+        link=st.tuples(st.booleans(), st.booleans()),
+        max_slack=st.integers(0, 5),
+        seed=st.integers(0, 3),
+    )
+    def test_multiday_conservation_and_caps(self, caps_flat, link,
+                                            max_slack, seed):
+        """The PR-4 conservation property, lifted onto a rolling 2-day
+        horizon: capacity cells are per ABSOLUTE (region, tier, hour 0..47)
+        — so the cap check runs over 48 distinct hours — and deadlines
+        hold on the absolute time axis."""
+        cfg = get_config(ARCH)
+        from repro.core.infrastructure import pack_infra, tpu_fleet
+
+        R, N = 2, 120
+        caps = np.asarray(caps_flat, np.float64).reshape(R, 3)
+        adjacency = np.eye(R, dtype=bool)
+        adjacency[0, 1], adjacency[1, 0] = link
+        grid = CarbonGrid.from_regions(DEFAULT_REGIONS[:2],
+                                       adjacency=adjacency,
+                                       latency_penalty=1.03,
+                                       n_days=2, day_scale=(1.0, 0.9))
+        infra = pack_infra(tpu_fleet(), "act")
+        fr = FleetRouter(cfg, regions=DEFAULT_REGIONS[:2], grid=grid,
+                         policy=TemporalPolicy(OraclePolicy(infra), caps,
+                                               max_defer_h=5))
+        batch, region, t_hours = _stream(N, seed=seed, n_regions=R,
+                                         max_slack=max_slack)
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        shed = np.asarray(state.shed)
+        defer = np.asarray(state.defer_hours)
+        eh = np.asarray(state.exec_hour)
+        arr = np.floor(t_hours).astype(int) % 48
+        assert (defer >= 0).all()
+        assert (defer <= np.minimum(batch.slack_h, 5)).all()
+        np.testing.assert_array_equal(eh, (arr + defer) % 48)
+        assert int(np.asarray(res.counts).sum()) + int(shed.sum()) == N
+        tgt = np.asarray(res.target)
+        ex = np.asarray(state.exec_region)
+        for h in range(48):
+            for r in range(R):
+                for t in range(3):
+                    got = int(((eh == h) & (ex == r) & (tgt == t)
+                               & ~shed).sum())
+                    assert got <= caps[r, t], (h, r, t, got)
+        assert adjacency[region[~shed], ex[~shed]].all()
+
+
+class TestLearnedFactorized:
+    """ISSUE-5 tentpole: LearnedPolicy rides the factorized engines."""
+
+    def test_scores_from_factors_matches_sweep(self, cfg, base):
+        """With no WAN hop the factorized hook IS the sweep scorer — same
+        features, same fitted model — for both the CI-linear and the
+        generic schedulers."""
+        import jax.numpy as jnp
+        from repro.core.schedulers import RegressionScheduler
+
+        n = 512
+        batch, region, t_hours = _stream(n, seed=11)
+        w = batch.workload(cfg)
+        hour = jnp.asarray(np.floor(t_hours).astype(np.int32) % 24)
+        home = jnp.asarray(region.astype(np.int32))
+        env = carbon_model.Environment(
+            ci=base.grid.table[home, hour],
+            interference=jnp.ones(3, jnp.float32),
+            net_slowdown=jnp.ones(2, jnp.float32))
+        factors = carbon_model.energy_factors_batch(
+            w, base.infra, env.interference, env.net_slowdown)
+        for sched_cls in (ClassificationScheduler, RegressionScheduler):
+            lp = _learned_policy(sched_cls)
+            sweep = lp.scores(w, env, batch.avail, hour=hour)
+            fact = lp.scores_from_factors(
+                factors, w, env.ci, batch.avail, hour=hour,
+                interference=env.interference,
+                net_slowdown=env.net_slowdown)
+            np.testing.assert_allclose(np.asarray(sweep), np.asarray(fact),
+                                       rtol=1e-5)
+
+    def test_ci_linear_einsum_matches_generic_inference(self, cfg, base,
+                                                        xgrid):
+        """The probed-sensitivity einsum path (ci_sens) and the generic
+        per-candidate re-featurization agree on every (region, tier) pair
+        score — the learned analogue of einsum-vs-sweep parity."""
+        import jax.numpy as jnp
+
+        n = 512
+        batch, region, t_hours = _stream(n, seed=12)
+        w = batch.workload(cfg)
+        hour = jnp.asarray(np.floor(t_hours).astype(np.int32) % 24)
+        home = jnp.asarray(region.astype(np.int32))
+        home_ci = xgrid.table[home, hour]
+        cand = xgrid.table[..., 2:][:, hour, :]  # (R, N, 3)
+        factors = carbon_model.energy_factors_batch(
+            w, base.infra, jnp.ones(3, jnp.float32),
+            jnp.ones(2, jnp.float32))
+        lp = _learned_policy()
+        assert lp.ci_sens is not None  # classification is CI-linear
+        generic = dataclasses.replace(lp, ci_sens=None)
+        a = lp.pair_scores_from_factors(factors, w, home_ci, cand,
+                                        batch.avail, hour=hour)
+        b = generic.pair_scores_from_factors(factors, w, home_ci, cand,
+                                             batch.avail, hour=hour)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+    def test_learned_joint_deferral_conserves(self, cfg, base):
+        """A learned scheduler on the joint (region, tier, hour) engine:
+        decisions respect deadlines, caps, and conservation exactly like
+        the oracle (the admission machinery is shared)."""
+        n = 1500
+        batch, region, t_hours = deferrable_stream_multiday(
+            n, N_REGIONS, n_days=2, seed=4)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(1.0, 0.4 * n / (N_REGIONS * 48))
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2)
+        fr = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            _learned_policy(), caps, max_defer_h=16))
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        shed = np.asarray(state.shed)
+        defer = np.asarray(state.defer_hours)
+        assert (defer >= 0).all()
+        assert (defer <= np.minimum(batch.slack_h, 16)).all()
+        assert (defer[batch.slack_h == 0] == 0).all()
+        assert int(np.asarray(res.counts).sum()) + int(shed.sum()) == n
+        assert int(res.deferred_count) > 0
+
+    def test_factorless_decide_on_rtt_grid_raises(self, cfg, base):
+        """A LearnedPolicy fit without infra has no way to compute the
+        EnergyFactors the WAN-hop gate needs: a direct decide() on an
+        rtt_s grid must refuse loudly instead of silently degrading to the
+        hop-blind legacy sweep."""
+        import jax.numpy as jnp
+
+        n = 64
+        batch, region, t_hours = _stream(n, seed=14)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS, rtt_s=1.0)
+        pol = PlacementPolicy(_learned_policy(), caps, grid=grid)
+        w = batch.workload(cfg)
+        hour = jnp.asarray(np.floor(t_hours).astype(np.int32) % 24)
+        home = jnp.asarray(region.astype(np.int32))
+        env = carbon_model.Environment(
+            ci=grid.table[home, hour],
+            interference=jnp.ones(3, jnp.float32),
+            net_slowdown=jnp.ones(2, jnp.float32))
+        with pytest.raises(ValueError, match="rtt_s"):
+            pol.decide(w, env, batch.avail,
+                       pol.initial_state(N_REGIONS, n),
+                       region=home, hour=hour)
+
+    def test_learned_rtt_gate_refuses_hop_broken_remotes(self, cfg, base):
+        """The WAN-hop QoS gate applies to learned candidates too: with a
+        1s hop, tight-budget requests never execute remotely."""
+        n = 2000
+        rng = np.random.default_rng(13)
+        batch = RequestBatch(
+            prompt_tokens=rng.integers(16, 2048, n).astype(np.float64),
+            max_new_tokens=rng.integers(8, 128, n).astype(np.float64),
+            latency_budget_s=rng.choice([0.6, 30.0], n),
+            bytes_per_token=np.full(n, 4.0),
+            available=np.ones((n, 3), bool))
+        region = rng.integers(0, N_REGIONS, n)
+        t_hours = rng.uniform(0.0, 24.0, n)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = 3.0
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS,
+                                          latency_penalty=1.0, rtt_s=1.0)
+        fr = FleetRouter(cfg, grid=grid, policy=PlacementPolicy(
+            _learned_policy(), caps))
+        res, state = fr.route_stream_with_state(batch, region, t_hours)
+        moved = (np.asarray(res.exec_region) != region) \
+            & ~np.asarray(state.shed)
+        tight = np.asarray(batch.latency_budget_s) < 1.0
+        assert not moved[tight].any()

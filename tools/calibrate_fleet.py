@@ -18,10 +18,8 @@ Run:  PYTHONPATH=src python tools/calibrate_fleet.py [--iters 4000]
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import (
@@ -41,7 +39,7 @@ from repro.core.carbon_model import pick_target
 from repro.core.constants import SECONDS_PER_YEAR
 from repro.core.design_space import CARBON_FREE_CI
 from repro.core.runtime_variance import VarianceScenario, scenario_multipliers
-from repro.core.workloads import ALL_PAPER_WORKLOADS, by_name
+from repro.core.workloads import ALL_PAPER_WORKLOADS
 
 M, E, D = int(Target.MOBILE), int(Target.EDGE_DC), int(Target.HYPERSCALE_DC)
 

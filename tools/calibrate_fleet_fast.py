@@ -30,7 +30,7 @@ from repro.core.constants import SECONDS_PER_YEAR
 from repro.core.design_space import CARBON_FREE_CI
 from repro.core.infrastructure import InfraParams
 from repro.core.runtime_variance import VarianceScenario, scenario_multipliers
-from repro.core.workloads import ALL_PAPER_WORKLOADS, stack_workloads
+from repro.core.workloads import ALL_PAPER_WORKLOADS
 
 M, E, D = int(Target.MOBILE), int(Target.EDGE_DC), int(Target.HYPERSCALE_DC)
 
