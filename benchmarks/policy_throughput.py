@@ -33,14 +33,23 @@ full n the cross-region placement path runs learned-vs-oracle head-to-head
 on the factorized einsum engines (the ~2x-of-oracle learned-throughput
 acceptance: a CI-linear classification scheduler collapses to one probed
 einsum, the piecewise regression scheduler re-featurizes per candidate
-region). At min(n, 200k) the joint deferral engines route the new 2-day
-``deferrable_stream_multiday`` against a rolling ``CarbonGrid`` with a
-guard day (3 days, so the last arrivals' deferral windows stay inside the
-horizon instead of wrapping back into day one):
-oracle vs. learned joint (region, tier, hour) scheduling, plus a
-repeated-diurnal vs. day-scaled (cleaner day two) grid pair showing
-midnight-crossing deferral chasing tomorrow's greener hours — capacity
-charged to day-two cells, not aliased into day one's.
+region). At min(n, 200k) the joint deferral engines route the 2-day
+``deferrable_stream_multiday`` against a matching 2-day rolling
+``CarbonGrid`` (the horizon tail is non-wrapping — windows past the last
+hour are refused, so no guard-day padding): oracle vs. learned joint
+(region, tier, hour) scheduling, plus a repeated-diurnal vs. day-scaled
+(cleaner day two, via ``scaled_days``) grid pair showing midnight-crossing
+deferral chasing tomorrow's greener hours — capacity charged to day-two
+cells, not aliased into day one's.
+
+A fifth section is the ISSUE-6 forecast-native pin: the grid carries a
+rolling CI forecast with realistic error (``sigma_h * sqrt(lead)``);
+policies decide on the forecast, carbon is charged at the actuals.
+Immediate cross-region routing vs. one-shot error-blind deferral vs. the
+rolling risk-aware re-planner (``route_stream_rolling`` + the
+``EmissionsLedger``). ASSERTS the forecast-aware re-planner routes less
+gCO2 than immediate routing — `benchmarks.run` turns an assertion into a
+failing CI job.
 
 Run:  PYTHONPATH=src python -m benchmarks.policy_throughput [--n 1000000]
 """
@@ -65,6 +74,7 @@ from repro.core.schedulers import (
 from repro.core.workloads import ALL_PAPER_WORKLOADS
 from repro.serve import (
     CapacityLimiter,
+    EmissionsLedger,
     FleetRouter,
     LearnedPolicy,
     OraclePolicy,
@@ -75,6 +85,7 @@ from repro.serve.streams import (
     deferrable_stream,
     deferrable_stream_multiday,
     diurnal_stream,
+    forecast_scenario,
     multi_region_stream,
 )
 
@@ -152,6 +163,7 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
     rows += placement_rows(cfg, infra, n=n, reps=reps)
     rows += temporal_rows(cfg, infra, n=min(n, 200_000), reps=reps)
     rows += multiday_rows(cfg, infra, train, n=n, reps=reps)
+    rows += forecast_rows(cfg, infra, n=min(n, 50_000), reps=reps)
     return rows
 
 
@@ -268,18 +280,14 @@ def multiday_rows(cfg, infra, train, n: int, reps: int = 1
     n_t = min(n, 200_000)
     batch, region, t_hours = deferrable_stream_multiday(n, n_regions,
                                                         n_days=2)
-    # 3-day grids for the 2-day stream: the guard day keeps the last
-    # arrivals' 16h deferral windows inside the rolling horizon (a window
-    # wrapping off the horizon end would re-enter day one's cells — the
-    # sizing rule in TemporalPolicy's docstring)
+    # a 2-day grid matches the 2-day stream: the horizon tail is
+    # non-wrapping, so the last arrivals' 16h windows past hour 47 are
+    # refused rather than aliased — no guard-day padding
     grid2 = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05,
-                                       n_days=3)
-    # day two (and its guard day) 15% cleaner: the multi-day forecast
-    # midnight-crossing deferral should chase (a stand-in for a real
-    # multi-day CI trajectory)
-    grid2c = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05,
-                                        n_days=3,
-                                        day_scale=(1.0, 0.85, 0.85))
+                                       n_days=2)
+    # day two 15% cleaner: the multi-day CI trajectory midnight-crossing
+    # deferral should chase
+    grid2c = grid2.scaled_days((1.0, 0.85))
     learned_lin = LearnedPolicy.fit(ClassificationScheduler(), train)
     learned_gen = LearnedPolicy.fit(RegressionScheduler(), train)
     free = np.full((n_regions, 3), np.inf)
@@ -334,6 +342,62 @@ def multiday_rows(cfg, infra, train, n: int, reps: int = 1
             f"deferred={int(res.deferred_count)} "
             f"mean_defer_h={float(res.mean_defer_hours):.2f} "
             f"vs_oracle={us / oracle_us:.2f}x"))
+    return rows
+
+
+def forecast_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
+    """Forecast-native scheduling under realistic forecast error: immediate
+    cross-region routing vs. one-shot error-blind deferral vs. the rolling
+    risk-aware re-planner, all charged at ACTUAL CI. Asserts the
+    forecast-aware re-planner beats immediate routing — run via
+    ``benchmarks.run`` (and its ``--smoke`` CI job) this is a hard gate."""
+    base = FleetRouter(cfg)
+    batch, region, t_hours, grid = forecast_scenario(
+        n, base.regions, sigma_h=0.03, seed=0)
+    n_regions = len(base.regions)
+    free = np.full((n_regions, 3), np.inf)
+    immediate = FleetRouter(cfg, grid=grid, policy=PlacementPolicy(
+        OraclePolicy(infra), free))
+    blind = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+        OraclePolicy(infra), free, max_defer_h=12))
+    aware = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+        OraclePolicy(infra), free, max_defer_h=12, risk_lambda=1.0))
+
+    rows = []
+    dt, res_im = _time_stream(immediate, batch, region, t_hours, reps)
+    g_im = float(res_im.routed_carbon_g)
+    rows.append(BenchRow(
+        "forecast_immediate", dt / n * 1e6,
+        f"req/s={n / dt:.0f} routed_g={g_im:.4g} sigma_h=0.03"))
+
+    dt, res_bl = _time_stream(blind, batch, region, t_hours, reps)
+    g_bl = float(res_bl.routed_carbon_g)
+    rows.append(BenchRow(
+        "forecast_oneshot_blind", dt / n * 1e6,
+        f"req/s={n / dt:.0f} routed_g={g_bl:.4g} "
+        f"saved_vs_immediate_g={g_im - g_bl:.4g} "
+        f"deferred={int(res_bl.deferred_count)}"))
+
+    roll = aware.route_stream_rolling(batch, region, t_hours, step_h=6,
+                                      ledger=EmissionsLedger())  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        roll = aware.route_stream_rolling(batch, region, t_hours, step_h=6,
+                                          ledger=EmissionsLedger())
+    dt = (time.perf_counter() - t0) / reps
+    g_rl = roll.routed_carbon_g
+    rows.append(BenchRow(
+        "forecast_rolling_risk_aware", dt / n * 1e6,
+        f"req/s={n / dt:.0f} routed_g={g_rl:.4g} "
+        f"saved_vs_immediate_g={g_im - g_rl:.4g} "
+        f"saved_vs_oneshot_g={g_bl - g_rl:.4g} "
+        f"deferred={roll.deferred_count} steps={len(roll.steps)}"))
+
+    # the ISSUE-6 CI gate: forecast-aware deferral must beat routing
+    # everything immediately on the realistic-error stream
+    assert g_rl < g_im, (
+        f"forecast-aware rolling deferral ({g_rl:.4g} g) failed to beat "
+        f"immediate routing ({g_im:.4g} g) at sigma_h=0.03")
     return rows
 
 

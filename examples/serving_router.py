@@ -1,6 +1,6 @@
 """Serving with the GreenScale router: from one request to a 1M-request fleet.
 
-Seven acts:
+Eight acts:
 
   1. The paper's Fig-5/9 behaviour live on an LM serving stack: the router
      moves request classes between device / edge / cloud tiers as the grid's
@@ -29,9 +29,16 @@ Seven acts:
   7. Multi-day horizon: the same deferral engine on a rolling 2-day
      ``CarbonGrid`` whose second day is cleaner — evening arrivals near
      midnight defer INTO day two (absolute-hour capacity cells, no
-     modulo-24 aliasing back into day one's spent budgets), and a learned
-     scheduler rides the same factorized engine head-to-head with the
-     oracle.
+     modulo-24 aliasing back into day one's spent budgets; windows past
+     the horizon's last hour are simply refused), and a learned scheduler
+     rides the same factorized engine head-to-head with the oracle.
+  8. Forecast-native scheduling: the grid carries an electricityMaps-style
+     rolling CI forecast (error growing with hours-ahead) next to the
+     actuals — policies DECIDE on the forecast but are CHARGED at the
+     actuals. One-shot error-blind deferral vs. the rolling re-planner
+     (``route_stream_rolling``: re-score held work as ``roll`` reveals
+     actuals, risk-penalize far-out hours, bank/spend capacity with the
+     ``EmissionsLedger``).
 
 Run:  PYTHONPATH=src python examples/serving_router.py [--requests 1000000]
 """
@@ -52,6 +59,7 @@ from repro.models import init_params
 from repro.serve import (
     CapacityLimiter,
     CarbonGrid,
+    EmissionsLedger,
     FleetRouter,
     GreenScaleRouter,
     LearnedPolicy,
@@ -66,6 +74,7 @@ from repro.serve.streams import (
     deferrable_stream,
     deferrable_stream_multiday,
     diurnal_stream,
+    forecast_scenario,
     multi_region_stream,
 )
 
@@ -256,11 +265,11 @@ def main() -> None:
         print(f"  {h:4d} | {'#' * bars[0]:30s} | {'#' * bars[1]:30s}")
 
     # --- act 7: multi-day horizon — defer across midnight into day two ------
-    # 3-day grid for the 2-day stream: the guard day keeps the last
-    # arrivals' deferral windows inside the rolling horizon (no wrap back
-    # into day one's cells)
+    # a 2-day grid for the 2-day stream: the horizon tail is non-wrapping,
+    # so the last arrivals' windows past hour 47 are simply refused — no
+    # guard-day padding needed
     grid2 = CarbonGrid.fully_connected(fleet.regions, latency_penalty=1.05,
-                                       n_days=3, day_scale=(1.0, 0.85, 0.85))
+                                       n_days=2).scaled_days((1.0, 0.85))
     mbatch2, mregion2, mt2 = deferrable_stream_multiday(
         dn, len(fleet.regions), n_days=2, seed=0)
     joint2 = FleetRouter(full, grid=grid2, policy=TemporalPolicy(
@@ -287,6 +296,37 @@ def main() -> None:
         print(f"  learned (classification) on the same factorized engine: "
               f"carbon {float(rl2.routed_carbon_g):9.4g} g  "
               f"deferred {int(rl2.deferred_count):,}")
+
+    # --- act 8: forecast-native scheduling — plan on forecasts, settle on
+    # actuals ----------------------------------------------------------------
+    fn = min(n, 20_000)  # the rolling planner re-plans per 6h step
+    fbatch, fregion, ft_hours, fgrid = forecast_scenario(
+        fn, fleet.regions, sigma_h=0.06, seed=0)
+    fcaps = np.full((len(fleet.regions), 3), np.inf)
+    blind = FleetRouter(full, grid=fgrid, policy=TemporalPolicy(
+        OraclePolicy(infra), fcaps, max_defer_h=12))
+    aware = FleetRouter(full, grid=fgrid, policy=TemporalPolicy(
+        OraclePolicy(infra), fcaps, max_defer_h=12, risk_lambda=1.0))
+    one = blind.route_stream(fbatch, fregion, ft_hours)
+    roll = aware.route_stream_rolling(fbatch, fregion, ft_hours, step_h=6,
+                                      ledger=EmissionsLedger())
+    print(f"\nforecast-native scheduling ({fn:,} requests, CI forecast "
+          f"error ~6%/sqrt(h) ahead; carbon charged at ACTUALS):")
+    print(f"  one-shot, error-blind   : carbon "
+          f"{float(one.routed_carbon_g):9.4g} g  "
+          f"shed {int(one.shed_count):,}")
+    print(f"  rolling, risk-aware     : carbon "
+          f"{roll.routed_carbon_g:9.4g} g  "
+          f"shed {roll.shed_count:,}  (re-planned every 6h as the "
+          f"forecast rolled)")
+    print(f"  forecast-native re-planning cuts routed gCO2 by "
+          f"{1 - roll.routed_carbon_g / float(one.routed_carbon_g):.1%}")
+    earned = np.sum([s.earned for s in roll.steps], axis=0)
+    spent = np.sum([s.spent for s in roll.steps], axis=0)
+    print(f"  emissions ledger: credit earned {earned.sum():.1f}h, "
+          f"spent {spent.sum():.1f}h across "
+          f"{len(fleet.regions)} regions (spent <= earned per region: "
+          f"{bool((spent <= earned + 1e-9).all())})")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from functools import partial
 
 import jax
@@ -213,6 +214,22 @@ def mobile_carbon_intensity(
 # --- Regions and the unified carbon-grid abstraction ---------------------------
 
 
+_day_scale_warned = False
+
+
+def _warn_day_scale() -> None:
+    """Warn ONCE per process that ``day_scale`` is deprecated."""
+    global _day_scale_warned
+    if not _day_scale_warned:
+        _day_scale_warned = True
+        warnings.warn(
+            "day_scale is deprecated: it scales the ACTUAL grid CI as a "
+            "stand-in for a forecast. Build the multi-day actuals "
+            "explicitly with CarbonGrid.scaled_days(...) and attach a real "
+            "rolling forecast with forecast_from_actual(sigma_h, ...) "
+            "instead.", DeprecationWarning, stacklevel=3)
+
+
 @dataclasses.dataclass(frozen=True)
 class RegionSpec:
     """One serving region: its grid trace drives edge + hyperscale CI.
@@ -248,12 +265,27 @@ class CarbonGrid:
     shape): hour ``h`` of the horizon is day ``h // 24``, hour-of-day
     ``h % 24``. A repeated-diurnal horizon (``from_regions(n_days=k)`` /
     ``repeat``) tiles the same 24-hour trace so every day looks alike —
-    bit-for-bit the single-day tables per day — while ``day_scale`` (or an
-    explicitly constructed ``ci_hourly``) lets consecutive days carry real
-    multi-day CI trajectories (CASPER-style provisioning: tomorrow's grid
-    is not today's). Consumers index absolute hours, so capacity windows
-    and deferral horizons that cross midnight land in the NEXT day's cells
-    instead of aliasing modulo 24 into already-spent budgets.
+    bit-for-bit the single-day tables per day — while ``scaled_days`` (or
+    an explicitly constructed ``ci_hourly``) lets consecutive days carry
+    real multi-day CI trajectories (CASPER-style provisioning: tomorrow's
+    grid is not today's). Consumers index absolute hours, so capacity
+    windows and deferral horizons that cross midnight land in the NEXT
+    day's cells instead of aliasing modulo 24 into already-spent budgets.
+    The horizon tail is NON-WRAPPING: hours at or beyond H do not exist —
+    temporal policies refuse/mask candidates past the last hour instead of
+    aliasing them back to hour 0 (the retired PR-5 guard-day convention).
+
+    The horizon carries TWO views of the grid-trace CI: ``ci_hourly`` are
+    the ACTUALS (what routed carbon is charged at) and ``ci_forecast`` the
+    rolling FORECAST (what scheduling policies see — electricityMaps-style
+    hourly tables whose error grows with hours-ahead). ``ci_forecast is
+    None`` means the forecast equals the actuals: the perfect-information
+    default, reproducing the pre-forecast decisions bit-for-bit.
+    ``forecast_from_actual`` synthesizes a forecast with relative error std
+    ``forecast_sigma_h * sqrt(lead_hours)`` from a FIXED per-(region, hour)
+    error field, and ``roll(now_h)`` re-anchors it: hours at or before
+    ``now_h`` are revealed as actuals and future errors shrink with their
+    remaining lead — deterministically, so re-planning converges smoothly.
 
     Arrays (R = number of regions, H = horizon hours):
 
@@ -292,6 +324,18 @@ class CarbonGrid:
     adjacency: jax.Array
     latency_penalty: jax.Array
     rtt_s: jax.Array
+    #: (R, H) FORECAST grid CI — what scheduling policies see. ``None`` =
+    #: the forecast equals the actuals (perfect information, the parity
+    #: default).
+    ci_forecast: jax.Array | None = None
+    #: per-sqrt(hour-ahead) relative forecast-error scale: at lead L hours
+    #: the forecast's relative error std is ``forecast_sigma_h * sqrt(L)``
+    #: (near hours are trustworthy, the horizon tail is noisy). 0.0 =
+    #: perfect forecasts; ``roll`` is then the identity.
+    forecast_sigma_h: float = 0.0
+    #: seed of the fixed forecast-error field ``roll`` re-anchors — the
+    #: same seed always draws the same error surface.
+    forecast_seed: int = 0
 
     @property
     def n_regions(self) -> int:
@@ -321,6 +365,93 @@ class CarbonGrid:
             self.ci_hourly * self.pue,
         ], axis=-1)
 
+    @property
+    def table_forecast(self) -> jax.Array:
+        """(R, H, 5) component-CI table as the SCHEDULER sees it: the
+        grid-trace-driven components [edge_net, edge_dc, hyper_dc] read the
+        rolling forecast, while the device-battery and core-path components
+        keep their flat known values (a battery buffers days of charge and
+        the long-haul path averages many grids — neither moves with
+        tomorrow's local weather). With ``ci_forecast is None`` this IS
+        ``table``: perfect forecasts, bit-for-bit the actuals."""
+        if self.ci_forecast is None:
+            return self.table
+        day = lambda a: jnp.broadcast_to(a[:, None], self.ci_hourly.shape)
+        return jnp.stack([
+            day(self.ci_mobile),
+            self.ci_forecast,
+            self.ci_forecast * self.pue,
+            day(self.ci_core),
+            self.ci_forecast * self.pue,
+        ], axis=-1)
+
+    def with_forecast(self, ci_forecast: np.ndarray) -> "CarbonGrid":
+        """Attach an explicit (R, H) forecast CI table (e.g. real
+        electricityMaps rolling hourly forecasts). Explicit tables do not
+        ``roll``; use ``forecast_from_actual`` for the synthetic error
+        model that does."""
+        fc = jnp.asarray(ci_forecast, jnp.float32)
+        if fc.shape != self.ci_hourly.shape:
+            raise ValueError(f"ci_forecast must be "
+                             f"{tuple(self.ci_hourly.shape)}, got "
+                             f"{tuple(fc.shape)}")
+        return dataclasses.replace(self, ci_forecast=fc)
+
+    def forecast_from_actual(self, sigma_h: float, seed: int = 0,
+                             now_h: int = 0) -> "CarbonGrid":
+        """Synthesize a rolling forecast from the actuals: multiplicative
+        error with relative std ``sigma_h * sqrt(lead_hours)`` drawn from a
+        FIXED per-(region, hour) error field (seeded), so ``roll`` shrinks
+        each hour's error smoothly as its lead shrinks instead of
+        re-drawing the future every step. ``sigma_h = 0`` keeps perfect
+        forecasts (``ci_forecast`` stays None — the bit-for-bit default).
+        """
+        if sigma_h < 0.0:
+            raise ValueError(f"sigma_h must be >= 0, got {sigma_h}")
+        grid = dataclasses.replace(self, forecast_sigma_h=float(sigma_h),
+                                   forecast_seed=int(seed))
+        return grid.roll(now_h)
+
+    def roll(self, now_h: int = 0) -> "CarbonGrid":
+        """Advance the rolling forecast to ``now_h``: hours at or before
+        now are revealed as actuals (lead 0), and each future hour's error
+        shrinks with its remaining lead ``h - now_h``. Deterministic — the
+        error field is fixed by ``forecast_seed`` — and the identity when
+        ``forecast_sigma_h == 0`` (perfect forecasts) or on explicit
+        ``with_forecast`` tables (which carry no error model)."""
+        if now_h < 0:
+            raise ValueError(f"now_h must be >= 0, got {now_h}")
+        sigma = float(self.forecast_sigma_h)
+        if sigma == 0.0:
+            return self
+        h = self.horizon_h
+        rng = np.random.default_rng(int(self.forecast_seed))
+        eps = rng.standard_normal((self.n_regions, h)).astype(np.float32)
+        lead = np.maximum(np.arange(h, dtype=np.float32) - float(now_h), 0.0)
+        scale = np.clip(1.0 + sigma * np.sqrt(lead)[None, :] * eps,
+                        0.05, None)
+        return dataclasses.replace(
+            self, ci_forecast=self.ci_hourly * jnp.asarray(scale))
+
+    def scaled_days(self, day_scale: np.ndarray) -> "CarbonGrid":
+        """Scale each DAY of the horizon's grid-trace CI by a per-day
+        factor ((n_days,) positive floats) — the explicit multi-day
+        trajectory constructor that replaces the deprecated ``day_scale``
+        argument. Scales ``ci_forecast`` along with the actuals when one
+        is attached (the forecast tracks the same trajectory);
+        device-battery and core-path CI stay at their flat daily values."""
+        scale = np.asarray(day_scale, np.float32).reshape(-1)
+        if scale.shape[0] != self.n_days:
+            raise ValueError(f"day_scale must have {self.n_days} entries, "
+                             f"got {scale.shape[0]}")
+        if (scale <= 0.0).any():
+            raise ValueError("day_scale entries must be positive")
+        per_h = jnp.asarray(np.repeat(scale, HOURS_PER_DAY))[None, :]
+        fc = (None if self.ci_forecast is None
+              else self.ci_forecast * per_h)
+        return dataclasses.replace(self, ci_hourly=self.ci_hourly * per_h,
+                                   ci_forecast=fc)
+
     def repeat(self, n_days: int,
                day_scale: np.ndarray | None = None) -> "CarbonGrid":
         """Tile this grid's one-day (or multi-day) horizon ``n_days`` times —
@@ -329,26 +460,34 @@ class CarbonGrid:
         With ``day_scale=None`` every repeated day is bit-for-bit the
         original tables, so a single-day consumer indexing ``hour % 24``
         and a multi-day consumer indexing the absolute hour see identical
-        CI rows (parity-tested). ``day_scale`` ((n_days,) positive floats)
-        scales the *grid-trace* CI of each repeated day — a cheap stand-in
-        for a real multi-day CI forecast (tomorrow windier/dirtier than
-        today); device-battery and core-path CI stay at their flat daily
-        values (the battery and the long-haul path average over days).
+        CI rows (parity-tested). ``day_scale`` is DEPRECATED (it scales
+        the ACTUAL grid CI as a stand-in for a forecast — warn-once,
+        parity-kept): build the multi-day trajectory explicitly with
+        ``scaled_days`` and attach a real rolling forecast with
+        ``forecast_from_actual`` instead.
         """
         if n_days < 1:
             raise ValueError(f"n_days must be >= 1, got {n_days}")
+        tile = lambda a: jnp.concatenate([a] * n_days, axis=1)
+        grid = dataclasses.replace(
+            self, ci_hourly=tile(self.ci_hourly), pue=tile(self.pue),
+            ci_forecast=(None if self.ci_forecast is None
+                         else tile(self.ci_forecast)))
         if day_scale is None:
-            scale = np.ones(n_days, np.float32)
-        else:
-            scale = np.asarray(day_scale, np.float32).reshape(-1)
-            if scale.shape[0] != n_days:
-                raise ValueError(f"day_scale must have {n_days} entries, "
-                                 f"got {scale.shape[0]}")
-            if (scale <= 0.0).any():
-                raise ValueError("day_scale entries must be positive")
+            return grid
+        _warn_day_scale()
+        scale = np.asarray(day_scale, np.float32).reshape(-1)
+        if scale.shape[0] != n_days:
+            raise ValueError(f"day_scale must have {n_days} entries, "
+                             f"got {scale.shape[0]}")
+        if (scale <= 0.0).any():
+            raise ValueError("day_scale entries must be positive")
+        # one factor per repeated BLOCK (a block is this grid's whole
+        # horizon), matching the historical semantics bit-for-bit
         ci = jnp.concatenate([self.ci_hourly * s for s in scale], axis=1)
-        pue = jnp.concatenate([self.pue] * n_days, axis=1)
-        return dataclasses.replace(self, ci_hourly=ci, pue=pue)
+        fc = (None if self.ci_forecast is None else jnp.concatenate(
+            [self.ci_forecast * s for s in scale], axis=1))
+        return dataclasses.replace(grid, ci_hourly=ci, ci_forecast=fc)
 
     @classmethod
     def from_regions(cls, regions: tuple[RegionSpec, ...] = DEFAULT_REGIONS,
@@ -357,7 +496,9 @@ class CarbonGrid:
                      pue: np.ndarray | float = 1.0,
                      rtt_s: np.ndarray | float | None = None,
                      n_days: int = 1,
-                     day_scale: np.ndarray | None = None) -> "CarbonGrid":
+                     day_scale: np.ndarray | None = None,
+                     forecast_sigma_h: float = 0.0,
+                     forecast_seed: int = 0) -> "CarbonGrid":
         """Build the stacked grid from per-region specs.
 
         ``adjacency`` defaults to the identity (no cross-region spill);
@@ -369,8 +510,10 @@ class CarbonGrid:
         ``rtt_s`` defaults to 0 everywhere (scalar = that round-trip for
         every off-diagonal hop, 0.0 on the diagonal). ``n_days`` > 1 builds
         a rolling multi-day horizon by repeating the diurnal day (see
-        ``repeat``; ``day_scale`` optionally scales each day's grid CI);
-        the default reproduces the single-day grid bit-for-bit.
+        ``repeat``; ``day_scale`` is deprecated — see ``scaled_days``);
+        ``forecast_sigma_h`` > 0 attaches a synthetic rolling forecast
+        (see ``forecast_from_actual``). The defaults reproduce the
+        single-day perfect-information grid bit-for-bit.
         """
         n = len(regions)
         ci_rows, mob, core = [], [], []
@@ -434,6 +577,9 @@ class CarbonGrid:
         )
         if n_days != 1 or day_scale is not None:
             grid = grid.repeat(n_days, day_scale)
+        if forecast_sigma_h:
+            grid = grid.forecast_from_actual(forecast_sigma_h,
+                                             seed=forecast_seed)
         return grid
 
     @classmethod
@@ -442,7 +588,9 @@ class CarbonGrid:
                         pue: np.ndarray | float = 1.0,
                         rtt_s: np.ndarray | float | None = None,
                         n_days: int = 1,
-                        day_scale: np.ndarray | None = None
+                        day_scale: np.ndarray | None = None,
+                        forecast_sigma_h: float = 0.0,
+                        forecast_seed: int = 0
                         ) -> "CarbonGrid":
         """Every region may spill to every other at a uniform effective-carbon
         penalty per WAN hop (CarbonEdge-style mesoscale placement)."""
@@ -450,7 +598,9 @@ class CarbonGrid:
         return cls.from_regions(regions, adjacency=np.ones((n, n), bool),
                                 latency_penalty=latency_penalty, pue=pue,
                                 rtt_s=rtt_s, n_days=n_days,
-                                day_scale=day_scale)
+                                day_scale=day_scale,
+                                forecast_sigma_h=forecast_sigma_h,
+                                forecast_seed=forecast_seed)
 
 
 # --- Uncertainty injection (paper §5.2) ---------------------------------------

@@ -408,6 +408,50 @@ def total_cf_from_factors(f: EnergyFactors, ci: jax.Array) -> jax.Array:
     return jnp.einsum("ntc,nc->nt", f.op_unit, ci) + f.emb_cf.sum(-1)
 
 
+# --- Forecast-error risk on the factorized scorer ------------------------------
+#
+# Operational carbon is LINEAR in CI, so scoring a candidate on expected
+# carbon plus a forecast-error penalty reduces to inflating its FORECAST CI
+# components before the einsum: score = E[cf] + lambda * std[cf] when the
+# relative error std of the grid-driven components at lead L hours is
+# sigma_h * sqrt(L) (see ``CarbonGrid.forecast_sigma_h``). Only the
+# grid-trace-driven components carry forecast risk — the device battery and
+# the core path are flat knowns.
+
+#: risk mask over the 5-component CI row [mobile, edge_net, edge_dc,
+#: core_net, hyper_dc]: the grid-trace-driven components.
+_HOME_CI_RISK = jnp.asarray([0.0, 1.0, 1.0, 0.0, 1.0], jnp.float32)
+#: risk mask over the relocating [edge_dc, core_net, hyper_dc] columns.
+_DC_CI_RISK = jnp.asarray([1.0, 0.0, 1.0], jnp.float32)
+
+
+def forecast_risk_scale(lead_h: jax.Array | float, sigma_h: float,
+                        risk_lambda: float) -> jax.Array:
+    """Risk-inflation multiplier ``1 + lambda * sigma_h * sqrt(lead)`` on
+    forecast-driven CI — the mean-plus-lambda-std score of a candidate at
+    ``lead_h`` hours ahead, in multiplier form. 1.0 at lead 0 (and
+    everywhere when ``risk_lambda`` or ``sigma_h`` is 0): an error-blind
+    scorer, bit-for-bit."""
+    lead = jnp.maximum(jnp.asarray(lead_h, jnp.float32), 0.0)
+    return 1.0 + risk_lambda * sigma_h * jnp.sqrt(lead)
+
+
+def inflate_ci_risk(home_ci: jax.Array, cand_ci_dc: jax.Array,
+                    scale: jax.Array | float
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Apply a ``forecast_risk_scale`` multiplier to the forecast-driven
+    components of a split candidate CI — ``home_ci`` (..., 5) rows and
+    ``cand_ci_dc`` (..., 3) relocating columns — leaving the known
+    device-battery and core-path components untouched. Because the scorer
+    is linear in CI, this prices the risk term into ANY factorized inner
+    policy (oracle einsums, learned re-featurization) without touching its
+    scoring code."""
+    s = jnp.asarray(scale, jnp.float32)
+    home = home_ci * (1.0 + (s - 1.0) * _HOME_CI_RISK)
+    dc = cand_ci_dc * (1.0 + (s - 1.0) * _DC_CI_RISK)
+    return home, dc
+
+
 def qos_feasible_from_factors(f: EnergyFactors, w: Workload,
                               extra_latency: jax.Array | float = 0.0
                               ) -> jax.Array:

@@ -1,8 +1,14 @@
 """Serving: batched engine, GreenScale routers, pluggable routing policies,
-the geo-temporal placement layer, and the temporal deferral engine."""
+the geo-temporal placement layer, the temporal deferral engine, and the
+rolling forecast-native re-planner."""
 
 from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
 from repro.serve.engine import ServeEngine
+from repro.serve.forecast import (
+    EmissionsLedger,
+    LedgerStep,
+    RollingRouteResult,
+)
 from repro.serve.placement import (
     PlacementPolicy,
     PlacementState,

@@ -249,9 +249,12 @@ class PlacementPolicy(RoutingPolicy):
         if self.grid is grid:
             return
         for field in ("ci_hourly", "ci_mobile", "ci_core", "pue",
-                      "adjacency", "latency_penalty", "rtt_s"):
-            if not np.array_equal(np.asarray(getattr(self.grid, field)),
-                                  np.asarray(getattr(grid, field))):
+                      "adjacency", "latency_penalty", "rtt_s",
+                      "ci_forecast", "forecast_sigma_h"):
+            a, b = getattr(self.grid, field), getattr(grid, field)
+            same = ((a is None) == (b is None)) and (
+                a is None or np.array_equal(np.asarray(a), np.asarray(b)))
+            if not same:
                 raise ValueError(
                     f"policy grid disagrees with the router's grid on "
                     f"{field!r} — pass the same CarbonGrid to both (or "
@@ -288,8 +291,12 @@ class PlacementPolicy(RoutingPolicy):
         no matter where the request executes, so a candidate's CI row mixes
         home [mobile, edge_net] with the candidate's [edge_dc, core_net,
         hyper_dc]. For the same reason the on-device tier exists only at
-        home — remote (region', MOBILE) pairs are structurally +inf."""
-        table = self.grid.table  # (R, H, 5)
+        home — remote (region', MOBILE) pairs are structurally +inf.
+
+        Candidates are scored on the grid's FORECAST view
+        (``table_forecast`` — the actual table when no forecast is
+        attached): the policy plans on what a scheduler could know."""
+        table = self.grid.table_forecast  # (R, H, 5)
         ci_all = table[:, hour % table.shape[1], :]  # (R, N, 5)
         home_ci = env.ci  # (N, 5) — the env the router routes/accounts under
         interference, net_slowdown = env.interference, env.net_slowdown
@@ -322,15 +329,21 @@ class PlacementPolicy(RoutingPolicy):
         return jnp.where(allowed, penalized, jnp.inf)
 
     def pair_scores_from_factors(self, factors: EnergyFactors, w, env, avail,
-                                 home: jax.Array, hour: jax.Array
+                                 home: jax.Array, hour: jax.Array,
+                                 fc_table: jax.Array | None = None
                                  ) -> jax.Array:
         """``pair_scores`` on the factorized evaluator: the inner policy's
         einsum scorer under every candidate region's CI row (mixed with the
         home [mobile, edge_net] components, exactly like the sweep) — no
         Table-1 re-evaluation per region — plus the WAN-hop
         ``grid.rtt_s[home, r']`` in each candidate's QoS latency check
-        (skipped statically when the grid has no rtt_s anywhere)."""
-        table = self.grid.table  # (R, H, 5)
+        (skipped statically when the grid has no rtt_s anywhere).
+
+        ``fc_table`` is an optional traced (R, H, 5) forecast component
+        table (the rolling re-planner passes the current roll); None falls
+        back to the grid's own ``table_forecast``, which is the actual
+        table when no forecast is attached — the historical behaviour."""
+        table = self.grid.table_forecast if fc_table is None else fc_table
         ci_dc = table[..., 2:][:, hour % table.shape[1], :]  # (R, N, 3)
         home_ci = env.ci  # (N, 5)
         extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
@@ -379,14 +392,15 @@ class PlacementPolicy(RoutingPolicy):
             factors is not None
             or getattr(self.inner, "infra", None) is not None)
 
-    def _cross_scores_factorized(self, factors, w, env, avail, home, hr):
+    def _cross_scores_factorized(self, factors, w, env, avail, home, hr,
+                                 fc_table=None):
         """(N, R, 3) candidate-pair scores on the einsum evaluator,
         computing factors here if the router didn't pass them."""
         if factors is None:
             factors = carbon_model.energy_factors_batch(
                 w, self.inner.infra, env.interference, env.net_slowdown)
         return self.pair_scores_from_factors(factors, w, env, avail,
-                                             home, hr)
+                                             home, hr, fc_table=fc_table)
 
     def _to_stream_order(self, n, win, home, order, inv_order):
         """Resolve the host-provided stream-order hint (or fall back to an
@@ -408,7 +422,12 @@ class PlacementPolicy(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None):
+        if cap_scale is not None or used0 is not None:
+            raise ValueError(
+                "cap_scale / used0 are rolling re-planner inputs only "
+                "TemporalPolicy implements — PlacementPolicy admits "
+                "against its fixed caps")
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:
@@ -430,7 +449,8 @@ class PlacementPolicy(RoutingPolicy):
             return self._decide_diag(s, win, home, order, inv, state)
         if self._use_factors(factors):
             s = self._cross_scores_factorized(
-                factors, w, env, avail, home, hr).reshape(n, n_pairs)
+                factors, w, env, avail, home, hr,
+                fc_table=fc_table).reshape(n, n_pairs)
             return self._decide_cross(s, win, home, order, inv, state)
         # non-factorizable inner policy: the verbatim PR-3 program (one
         # Table-1 sweep per candidate region, fixed-round admission). The

@@ -27,7 +27,8 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       over a row IS the policy's decision for that request, which is what
       lets wrappers like ``CapacityLimiter`` re-rank and spill.
   ``decide(w, env, avail, state, *, region=None, hour=None, outputs=None,
-      order=None, inv_order=None, slack=None, factors=None)
+      order=None, inv_order=None, slack=None, factors=None, fc_table=None,
+      cap_scale=None, used0=None)
       -> (targets, new_state)``
       the decision entry point. ``state`` is a policy-owned pytree threaded
       through the call (capacity counters, ...); stateless policies pass it
@@ -47,7 +48,16 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       precomputed ``carbon_model.EnergyFactors`` batch (the router computes
       it once for policies that set ``wants_factors = True``) from which
       CI-linear policies score every candidate (region, tier, hour) as an
-      einsum instead of one Table-1 sweep per candidate region.
+      einsum instead of one Table-1 sweep per candidate region. ``fc_table``
+      is an optional traced (R, H, 5) FORECAST component table — what
+      forecast-native policies score candidate hours on, while routed carbon
+      is charged at actuals; None means score on the grid's own forecast
+      view (which IS the actual table when no forecast is attached).
+      ``cap_scale`` ((R,) float32) and ``used0`` (flat pre-consumed window
+      cell counts) are rolling re-planner inputs consumed only by capacity-
+      aware temporal policies: a per-region emissions-budget multiplier on
+      window capacity, and cells already committed by earlier planning
+      steps. Policies that don't implement them ignore (or refuse) them.
   ``initial_state(n_regions, n_requests) -> pytree``
       the state to thread into the first ``decide``.
 
@@ -134,7 +144,10 @@ class RoutingPolicy(abc.ABC):
                order: jax.Array | None = None,
                inv_order: jax.Array | None = None,
                slack: jax.Array | None = None,
-               factors: Any | None = None
+               factors: Any | None = None,
+               fc_table: jax.Array | None = None,
+               cap_scale: jax.Array | None = None,
+               used0: jax.Array | None = None
                ) -> tuple[jax.Array, Any]:
         s = self.scores(w, env, avail, hour=hour)
         return jnp.argmin(s, axis=-1).astype(jnp.int32), state
@@ -300,7 +313,7 @@ class OraclePolicy(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None):
         out = outputs if outputs is not None else \
             carbon_model.route_many_envs(w, self.infra, env, avail)
         t = {"carbon": out.target, "latency": out.target_latency,
@@ -616,7 +629,7 @@ class CapacityLimiter(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None):
         n = w.flops.shape[0]
         n_cols = self._caps.size
         region = (jnp.zeros((n,), jnp.int32) if region is None

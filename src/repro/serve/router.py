@@ -384,7 +384,10 @@ class FleetRouter:
         elif self.grid.n_regions != len(self.regions):
             raise ValueError(f"grid covers {self.grid.n_regions} regions, "
                              f"router has {len(self.regions)}")
-        self._ci_table = self.grid.table  # (R, H, 5)
+        self._ci_table = self.grid.table  # (R, H, 5) actuals — the charge
+        # forecast view the policies decide on; the SAME buffer as
+        # ``_ci_table`` when no forecast is attached (the split is inert)
+        self._ci_fc = self.grid.table_forecast
         # arrival times index the grid's rolling horizon by ABSOLUTE hour
         # (wrapping only at the horizon end), so a multi-day grid gives day
         # two its own CI rows and capacity cells; a single-day grid keeps
@@ -409,14 +412,21 @@ class FleetRouter:
         # default path keeps the sweep program bit-for-bit.
         use_factors = bool(getattr(self.policy, "wants_factors", False))
         rtt_s = self.grid.rtt_s
+        # Forecast/actual split (host-static): with a forecast attached the
+        # policy DECIDES on the forecast view while routed carbon is CHARGED
+        # at actuals; without one, ``ci_fc`` is the very same buffer as
+        # ``ci_table`` and the whole split compiles away — the historical
+        # program, bit-for-bit.
+        split = self.grid.ci_forecast is not None
 
         @jax.jit
         def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
-                         hour: jax.Array, ci_table: jax.Array, state,
+                         hour: jax.Array, ci_table: jax.Array,
+                         ci_fc: jax.Array, state,
                          order: jax.Array, inv_order: jax.Array,
-                         slack: jax.Array
+                         slack: jax.Array, cap_scale, used0
                          ) -> tuple[FleetRouteResult, object]:
-            env = Environment(ci=ci_table[region, hour],  # (N, 5)
+            env = Environment(ci=ci_fc[region, hour],  # (N, 5) forecast view
                               interference=interference,
                               net_slowdown=net_slowdown)
             # Table-1 evaluation supplies the carbon/QoS accounting and the
@@ -431,10 +441,30 @@ class FleetRouter:
             else:
                 factors = None
                 out = carbon_model.route_many_envs(w, infra, env, avail)
+            # settle-at-actuals hook: what a (N,) target vector COSTS on the
+            # actual table at the arrival (region, hour). QoS feasibility is
+            # CI-free, so only carbon re-prices under the split.
+            if not split:
+                take_act = lambda t: jnp.take_along_axis(
+                    out.total_cf, t[:, None], axis=1)[:, 0]
+            elif factors is not None:
+                cf_act = carbon_model.total_cf_from_factors(
+                    factors, ci_table[region, hour])
+                take_act = lambda t: jnp.take_along_axis(
+                    cf_act, t[:, None], axis=1)[:, 0]
+            else:
+                out_act = carbon_model.route_many_envs(
+                    w, infra,
+                    Environment(ci=ci_table[region, hour],
+                                interference=interference,
+                                net_slowdown=net_slowdown), avail)
+                take_act = lambda t: jnp.take_along_axis(
+                    out_act.total_cf, t[:, None], axis=1)[:, 0]
             targets, new_state = policy.decide(
                 w, env, avail, state, region=region, hour=hour, outputs=out,
                 order=order, inv_order=inv_order, slack=slack,
-                factors=factors)
+                factors=factors, fc_table=ci_fc, cap_scale=cap_scale,
+                used0=used0)
             shed = getattr(new_state, "shed", None)
             exec_region = getattr(new_state, "exec_region", None)
             exec_hour = getattr(new_state, "exec_hour", None)
@@ -443,10 +473,11 @@ class FleetRouter:
             take2 = lambda a, t: jnp.take_along_axis(
                 a, t[:, None], axis=1)[:, 0]
             if exec_region is None and exec_hour is None:
-                # no cross-region / deferred placement: execute on arrival
+                # no cross-region / deferred placement: execute on arrival,
+                # charged at the arrival cell's ACTUAL CI
                 exec_region = region
                 spilled = jnp.zeros((), jnp.int32)
-                carbon = take(out, targets)
+                carbon = take_act(targets)
                 feas = take2(out.ok, targets)
             elif factors is not None:
                 # executed-placement accounting on the factorized evaluator:
@@ -481,8 +512,11 @@ class FleetRouter:
                 # executing env mixes home [mobile, edge_net] CI with the
                 # executing region's [edge_dc, core_net, hyper_dc] — the
                 # same mixing PlacementPolicy.pair_scores decides with.
+                # Home components come from the ACTUAL table (== env.ci
+                # without a forecast — the historical values bit-for-bit).
                 ci_exec = jnp.concatenate(
-                    [env.ci[:, :2], ci_table[exec_region, hour][:, 2:]],
+                    [ci_table[region, hour][:, :2],
+                     ci_table[exec_region, hour][:, 2:]],
                     axis=1)
                 env_exec = Environment(ci=ci_exec,
                                        interference=interference,
@@ -494,7 +528,7 @@ class FleetRouter:
                     moved = moved & ~shed
                 spilled = moved.sum().astype(jnp.int32)
                 carbon = jnp.where(moved, take(out_exec, targets),
-                                   take(out, targets))
+                                   take_act(targets))
                 feas = jnp.where(moved, take2(out_exec.ok, targets),
                                  take2(out.ok, targets))
             # (region, tier) assignment counts as a one-hot reduction over
@@ -524,9 +558,12 @@ class FleetRouter:
                 total_carbon_g=carbon.sum(),
                 routed_carbon_g=(carbon.sum() if shed is None
                                  else (carbon * ~shed).sum()),
-                latency_opt_carbon_g=take(out, out.target_latency).sum(),
-                energy_opt_carbon_g=take(out, out.target_energy).sum(),
-                oracle_carbon_g=take(out, out.target).sum(),
+                # reference baselines decide on the forecast view too (they
+                # are schedulers, not oracles-with-hindsight), but are
+                # charged at actuals like everything else
+                latency_opt_carbon_g=take_act(out.target_latency).sum(),
+                energy_opt_carbon_g=take_act(out.target_energy).sum(),
+                oracle_carbon_g=take_act(out.target).sum(),
                 infeasible_count=(~feas).sum().astype(jnp.int32),
                 shed_count=(jnp.zeros((), jnp.int32) if shed is None
                             else shed.sum().astype(jnp.int32)),
@@ -571,6 +608,20 @@ class FleetRouter:
         hour_np = (np.floor(np.asarray(t_hours))
                    % self._horizon_h).astype(np.int32)
         region_np = np.asarray(region).astype(np.int32)
+        return self._route_arrays(batch, region_np, hour_np)
+
+    def _route_arrays(self, batch: RequestBatch, region_np: np.ndarray,
+                      hour_np: np.ndarray, *, ci_fc: jax.Array | None = None,
+                      cap_scale: jax.Array | None = None,
+                      used0: jax.Array | None = None,
+                      slack_np: np.ndarray | None = None
+                      ) -> tuple[FleetRouteResult, object]:
+        """One jitted ``_fleet_route`` call on prepared int32 arrays — the
+        seam the rolling re-planner drives with per-step forecast tables
+        (``ci_fc``, defaulting to the grid's own forecast view), budget-
+        ledger capacity multipliers, pre-committed cell counts, and
+        re-anchored slack. Computes the host-side stream-order hint exactly
+        as ``route_stream_with_state`` always did."""
         # stream-order hint: stable radix sort by arrival window — or by
         # (window, home region) when the policy wants finer segments
         # (tier-only PlacementPolicy) — on the host; only computed for
@@ -592,11 +643,31 @@ class FleetRouter:
             order, inv_order = jnp.asarray(order_np), jnp.asarray(inv_np)
         region = jnp.asarray(region_np)
         hour = jnp.asarray(hour_np)
-        slack = jnp.asarray(batch.slack_h)
+        slack = jnp.asarray(batch.slack_h if slack_np is None else
+                            np.asarray(slack_np, np.int32))
         state = self.policy.initial_state(len(self.regions), len(batch))
         return self._fleet_route(batch.workload(self.cfg), batch.avail,
-                                 region, hour, self._ci_table, state,
-                                 order, inv_order, slack)
+                                 region, hour, self._ci_table,
+                                 self._ci_fc if ci_fc is None else ci_fc,
+                                 state, order, inv_order, slack,
+                                 cap_scale, used0)
+
+    def route_stream_rolling(self, batch: RequestBatch, region: np.ndarray,
+                             t_hours: np.ndarray, *, step_h: int = 6,
+                             ledger=None):
+        """Rolling re-planned routing: plan the stream in ``step_h``-hour
+        steps, holding deferred work in a carry-over queue that is
+        re-scored each step as ``CarbonGrid.roll`` advances the forecast
+        (revealed hours become actuals), with an optional
+        ``EmissionsLedger`` conserving capacity ahead of predicted clean
+        windows. Requires a ``TemporalPolicy``; returns a
+        ``repro.serve.forecast.RollingRouteResult``. One-shot equivalence:
+        with a perfect forecast (``forecast_sigma_h == 0``) every plan
+        step sees the same table, so decisions match the one-shot
+        ``route_stream`` on the same commit schedule."""
+        from repro.serve import forecast as _forecast
+        return _forecast.route_stream_rolling(
+            self, batch, region, t_hours, step_h=step_h, ledger=ledger)
 
     def admit_windows(self, res: FleetRouteResult, t_hours: np.ndarray,
                       engine, n_windows: int = 24) -> list[np.ndarray]:

@@ -126,11 +126,11 @@ def deferrable_stream_multiday(
     windows cross midnight into the NEXT day's capacity budgets — the
     scenario the multi-day ``CarbonGrid`` horizon exists for (a modulo-24
     wrap would alias those windows into already-spent day-one cells).
-    Route it against a grid whose horizon covers the whole stream PLUS its
-    deferral allowance — ``grid n_days >= this n_days + 1`` when
-    ``max_defer_h`` can reach past the last day's midnight — so no
-    deadline window wraps off the rolling horizon's end (the horizon wraps
-    modulo H, and a wrapped window would re-enter day one's cells).
+    The horizon tail is NON-WRAPPING: deadline windows reaching past the
+    grid's last hour simply lose those candidate hours (the work executes
+    earlier or sheds), so a grid with ``n_days`` matching the stream is
+    sufficient — no guard-day padding convention, tail arrivals just see a
+    shorter menu.
     """
     batch, region, t_hours = deferrable_stream(
         n, n_regions, seed=seed, batch_frac=batch_frac,
@@ -138,3 +138,31 @@ def deferrable_stream_multiday(
     rng = np.random.default_rng(seed + 202)
     day = rng.integers(0, n_days, n)
     return batch, region, t_hours + 24.0 * day
+
+
+def forecast_scenario(
+    n: int, regions, *, n_days: int = 2, sigma_h: float = 0.03,
+    seed: int = 0, latency_penalty: float = 1.05,
+    batch_frac: float = 0.5,
+):
+    """The forecast-error deferral scenario in one call: a multi-day
+    deferrable stream plus a fully-connected multi-day grid carrying an
+    electricityMaps-style rolling forecast whose per-hour-ahead relative
+    error scale is ``sigma_h`` (``sigma_h * sqrt(lead)`` at ``lead`` hours
+    out; 0 = a perfect forecast, the oracle grid bit-for-bit).
+
+    Returns ``(batch, region, t_hours, grid)`` — route the stream against
+    the grid with any policy; what the policy SEES is the forecast, what
+    it is CHARGED is the actuals. ``sigma_h ~= 0.03`` is the realistic
+    day-ahead error magnitude (~15% at 24 h lead); double it for a
+    stress sweep.
+    """
+    from repro.core.carbon_intensity import CarbonGrid
+
+    batch, region, t_hours = deferrable_stream_multiday(
+        n, len(regions), n_days=n_days, seed=seed, batch_frac=batch_frac)
+    grid = CarbonGrid.fully_connected(
+        regions, latency_penalty=latency_penalty, n_days=n_days)
+    if sigma_h:
+        grid = grid.forecast_from_actual(sigma_h, seed=seed)
+    return batch, region, t_hours, grid

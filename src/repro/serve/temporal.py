@@ -104,18 +104,29 @@ class TemporalPolicy(PlacementPolicy):
     crosses midnight is scored at DAY TWO's CI and admitted against day
     two's capacity cells — no modulo-24 aliasing into day one's spent
     budgets, and ``max_defer_h`` may exceed the hours left in the arrival
-    day. The horizon is ROLLING: candidates past its last hour wrap to
-    hour 0 (on a repeated-diurnal grid that is the same CI but shares the
-    first day's cells again), so size the grid to cover the stream —
-    ``n_days * 24 >= last arrival + max_defer_h`` keeps every deadline
-    window inside the horizon; a non-wrapping tail is a recorded ROADMAP
-    follow-up. Admission runs skip-full best-open attempts under a
+    day. The horizon tail is NON-WRAPPING: candidate hours past the
+    grid's last hour are refused (masked +inf) instead of aliasing to
+    hour 0, so a tail arrival whose deadline extends past the horizon
+    simply has fewer candidates — it executes earlier or is shed, never
+    wrapped into hour 0's CI and budgets, and no guard-day padding is
+    needed (that convention is retired). Candidate hours are scored on
+    the grid's FORECAST view (``table_forecast``; the actual table when
+    no forecast is attached), optionally with a ``risk_lambda`` penalty
+    that inflates forecast-driven CI components by ``1 + risk_lambda *
+    forecast_sigma_h * sqrt(defer)`` — a mean-plus-lambda-std score that
+    shrinks the preference for far-out (noisier) candidate hours;
+    ``risk_lambda = 0`` (or a forecast-free grid) scores bit-identically
+    to the error-blind engine (parity-tested).
+    Admission runs skip-full best-open attempts under a
     ``lax.while_loop`` (same machinery as the cross-region
     ``PlacementPolicy``): exhaustive — a routable request is shed iff every
     candidate cell within its deadline is at cap.
     """
 
     max_defer_h: int = 12
+    #: forecast-error risk aversion: weight of the per-defer
+    #: ``sigma * sqrt(d)`` CI inflation in candidate scores (0 = blind).
+    risk_lambda: float = 0.0
 
     def __post_init__(self):
         super().__post_init__()
@@ -168,7 +179,8 @@ class TemporalPolicy(PlacementPolicy):
             defer_hours=jnp.zeros((n_requests,), jnp.int32))
 
     def candidate_scores(self, factors, w, env, avail, home: jax.Array,
-                         hr: jax.Array) -> jax.Array:
+                         hr: jax.Array,
+                         fc_table: jax.Array | None = None) -> jax.Array:
         """Scores of every (defer[, region], tier) candidate: the inner
         policy's factorized score under the candidate region's CI at hour
         ``arrival + d`` — home [mobile, edge_net] components at the HOME
@@ -177,37 +189,57 @@ class TemporalPolicy(PlacementPolicy):
         (S+1, N, R, 3) with cross-region spill; (S+1, N, 3) in tier-only
         mode, where home is the only candidate and the adjacency/penalty/
         remote-mobile masks are no-ops, so only the home row is scored.
-        Candidate hours wrap at the GRID HORIZON, not the day: on a
-        multi-day grid a midnight-crossing defer reads day two's CI rows.
-        ``env`` supplies the non-CI scoring context (interference /
-        net_slowdown) feature-based inner policies need; each candidate is
-        scored with its own execution hour."""
-        table = self.grid.table  # (R, H, 5)
+        Candidate hours index the GRID HORIZON absolutely: on a multi-day
+        grid a midnight-crossing defer reads day two's CI rows, and hours
+        past the horizon's last hour are clamped to it here — ``decide``
+        masks those candidates out entirely (the non-wrapping tail), so
+        the clamp only keeps gathers in bounds. CI rows come from the
+        grid's FORECAST view (``fc_table`` when the rolling re-planner
+        passes one, else ``table_forecast``), risk-inflated per defer
+        when ``risk_lambda`` and the grid's ``forecast_sigma_h`` are both
+        non-zero. ``env`` supplies the non-CI scoring context
+        (interference / net_slowdown) feature-based inner policies need;
+        each candidate is scored with its own execution hour."""
+        table = (self.grid.table_forecast if fc_table is None
+                 else fc_table)  # (R, H, 5)
         table_dc = table[..., 2:]  # relocating [edge_dc, core_net, hyper_dc]
         extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
         ctx = dict(interference=env.interference,
                    net_slowdown=env.net_slowdown)
+        sigma = float(self.grid.forecast_sigma_h)
+        lam = float(self.risk_lambda)
+        risky = sigma > 0.0 and lam != 0.0  # host-static: zero-risk path
+        # compiles the historical program
+        S = self.max_defer_h
 
-        def scores_at(he_d):  # (N,) absolute horizon hour at execution
+        def scores_at(he_d, rscale):  # (N,) absolute exec hour, () risk
             home_ci = table[home, he_d]  # (N, 5)
             if self._diag_only:
                 ci_dc = table_dc[home, he_d][None]  # (1, N, 3): home only
+                if risky:
+                    home_ci, ci_dc = carbon_model.inflate_ci_risk(
+                        home_ci, ci_dc, rscale)
                 return self._inner_pair_scores(factors, w, home_ci, ci_dc,
                                                avail, None, hour=he_d,
                                                **ctx)[0]  # (N, 3)
             ci_dc = table_dc[:, he_d, :]  # (R, N, 3)
+            if risky:
+                home_ci, ci_dc = carbon_model.inflate_ci_risk(
+                    home_ci, ci_dc, rscale)
             s = self._inner_pair_scores(factors, w, home_ci, ci_dc, avail,
                                         extra, hour=he_d, **ctx)  # (R, N, 3)
             return self._mask_pairs(jnp.moveaxis(s, 0, 1), home)
 
-        he = (hr[None, :] + jnp.arange(self.max_defer_h + 1,
-                                       dtype=hr.dtype)[:, None]) \
-            % self._horizon_h  # (S+1, N)
-        return jax.vmap(scores_at)(he)
+        he = jnp.clip(
+            hr[None, :] + jnp.arange(S + 1, dtype=hr.dtype)[:, None],
+            0, self._horizon_h - 1)  # (S+1, N)
+        rscales = carbon_model.forecast_risk_scale(
+            jnp.arange(S + 1, dtype=jnp.float32), sigma, lam)  # (S+1,)
+        return jax.vmap(scores_at)(he, rscales)
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None):
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:
@@ -232,8 +264,15 @@ class TemporalPolicy(PlacementPolicy):
                 w, infra, env.interference, env.net_slowdown)
 
         # --- candidate scores over (defer[, region], tier) ----------------
-        s_all = self.candidate_scores(factors, w, env, avail, home, hr)
-        d_ok = jnp.arange(S + 1)[:, None] <= slack_w[None, :]  # (S+1, N)
+        s_all = self.candidate_scores(factors, w, env, avail, home, hr,
+                                      fc_table=fc_table)
+        # a candidate must sit within the request's slack AND inside the
+        # grid horizon — the non-wrapping tail: hours past H-1 are refused,
+        # never aliased to hour 0 (d = 0 is always in-horizon, so this can
+        # never by itself make a routable request unroutable)
+        d_ok = ((jnp.arange(S + 1)[:, None] <= slack_w[None, :])
+                & ((hr[None, :] + jnp.arange(S + 1, dtype=hr.dtype)[:, None])
+                   < self._horizon_h))  # (S+1, N)
         if self._diag_only:
             # home is the only candidate region ((S+1, N, 3) scores): the
             # width-(S+1)*3 home columns keep the admission one-hots narrow
@@ -264,7 +303,13 @@ class TemporalPolicy(PlacementPolicy):
             n_segments = W
         starts = jnp.searchsorted(seg_s, jnp.arange(n_segments))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
-        caps_flat = self._caps.reshape(-1)
+        # cap_scale is the rolling re-planner's per-region emissions-budget
+        # multiplier (conserve ahead of predicted clean windows, spend
+        # ahead of dirty ones); None = the configured caps, bit-for-bit
+        caps_rt = (self._caps if cap_scale is None
+                   else self._caps * jnp.asarray(cap_scale,
+                                                 jnp.float32)[:, None])
+        caps_flat = caps_rt.reshape(-1)
         caps_cell = jnp.tile(caps_flat, W)
         limit = W * n_pairs + 1  # closable cells + 1
 
@@ -341,11 +386,14 @@ class TemporalPolicy(PlacementPolicy):
             return (open_mask(used, placed), used, placed, exec_pair,
                     exec_d, k + 1)
 
-        used0 = jnp.zeros((W * n_pairs,), jnp.float32)
+        # used0 seeds the cell ledger with capacity already committed by
+        # earlier rolling-planner steps (None = fresh, the one-shot path)
+        used_init = (jnp.zeros((W * n_pairs,), jnp.float32) if used0 is None
+                     else jnp.asarray(used0, jnp.float32).reshape(-1))
         placed0 = jnp.zeros((n,), bool)
         _, used, placed, exec_pair, exec_d, _ = jax.lax.while_loop(
             cond, body,
-            (open_mask(used0, placed0), used0, placed0,
+            (open_mask(used_init, placed0), used_init, placed0,
              jnp.zeros((n,), jnp.int32),
              jnp.zeros((n,), jnp.int32),
              jnp.zeros((), jnp.int32)))
@@ -372,8 +420,12 @@ class TemporalPolicy(PlacementPolicy):
         exec_region = jnp.where(shed_s, home_s, exec_pair // N_TARGETS)[inv]
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
         defer = exec_d.astype(jnp.int32)[inv]
-        exec_hour = ((hr_s + exec_d) % self._horizon_h).astype(jnp.int32)[inv]
-        counts = used.reshape(W, n_regions, N_TARGETS).sum(axis=0)
+        # non-wrapping tail: admitted candidates always satisfy
+        # hr + d < horizon (masked above), so no modulo here — fallback
+        # rows have d = 0 and stay at their (in-horizon) arrival hour
+        exec_hour = (hr_s + exec_d).astype(jnp.int32)[inv]
+        counts = (used - used_init).reshape(
+            W, n_regions, N_TARGETS).sum(axis=0)
         shed_pair = (jax.nn.one_hot(pair0, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(
             n_regions, N_TARGETS)

@@ -1,6 +1,8 @@
 """Tests for grid traces, charging behaviour, uncertainty injection, and
 the rolling multi-day CarbonGrid horizon."""
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -145,3 +147,64 @@ class TestMultiDayGrid:
             g.repeat(2, day_scale=(1.0,))
         with pytest.raises(ValueError, match="positive"):
             g.repeat(2, day_scale=(1.0, -0.5))
+
+
+class TestForecastSplit:
+    """The forecast/actual split on the grid (ISSUE-6 tentpole)."""
+
+    def test_day_scale_deprecation_warns_once(self):
+        from repro.core import carbon_intensity as ci_mod
+
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        old = ci_mod._day_scale_warned
+        try:
+            ci_mod._day_scale_warned = False
+            with pytest.warns(DeprecationWarning, match="scaled_days"):
+                g.repeat(2, day_scale=(1.0, 0.8))
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")  # second use: silent
+                g.repeat(2, day_scale=(1.0, 0.8))
+        finally:
+            ci_mod._day_scale_warned = old
+
+    def test_scaled_days_validation(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=2)
+        with pytest.raises(ValueError, match="day_scale"):
+            g.scaled_days((1.0,))
+        with pytest.raises(ValueError, match="positive"):
+            g.scaled_days((1.0, 0.0))
+
+    def test_table_forecast_scales_grid_components_only(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=2)
+        fc = np.asarray(g.ci_hourly) * 2.0
+        gf = g.with_forecast(fc)
+        t, tf = np.asarray(gf.table), np.asarray(gf.table_forecast)
+        # grid-trace-driven components (edge net/DC, hyperscale) follow the
+        # forecast; device battery and core path stay at actual flat values
+        np.testing.assert_allclose(tf[..., 1], 2.0 * t[..., 1], rtol=1e-6)
+        np.testing.assert_allclose(tf[..., 2], 2.0 * t[..., 2], rtol=1e-6)
+        np.testing.assert_allclose(tf[..., 4], 2.0 * t[..., 4], rtol=1e-6)
+        np.testing.assert_array_equal(tf[..., 0], t[..., 0])
+        np.testing.assert_array_equal(tf[..., 3], t[..., 3])
+
+    def test_roll_is_identity_without_error_model(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS, n_days=2)
+        assert g.roll(12) is g
+        gf = g.with_forecast(np.asarray(g.ci_hourly) * 1.1)
+        np.testing.assert_array_equal(np.asarray(gf.roll(12).ci_forecast),
+                                      np.asarray(gf.ci_forecast))
+        with pytest.raises(ValueError, match="now_h"):
+            g.roll(-1)
+
+    def test_forecast_from_actual_rejects_negative_sigma(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS)
+        with pytest.raises(ValueError, match="sigma_h"):
+            g.forecast_from_actual(-0.1)
+
+    def test_forecast_survives_repeat_and_scaled_days(self):
+        g = CarbonGrid.from_regions(DEFAULT_REGIONS).forecast_from_actual(
+            0.05, seed=1)
+        g2 = g.repeat(2).scaled_days((1.0, 0.5))
+        fc = np.asarray(g2.ci_forecast)
+        assert fc.shape == (len(DEFAULT_REGIONS), 48)
+        np.testing.assert_allclose(fc[:, 24:], 0.5 * fc[:, :24], rtol=1e-6)

@@ -1,0 +1,350 @@
+"""Forecast-native scheduling tests (ISSUE-6): forecast/actual split
+parity (zero error == the error-blind engine bit-for-bit), the rolling
+re-planner's carry-over/commit conservation, the emissions-budget ledger's
+credit accounting, the risk-aware-beats-blind acceptance margin, and the
+non-wrapping horizon tail regression."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid
+from repro.serve import (
+    EmissionsLedger,
+    FleetRouter,
+    OraclePolicy,
+    PlacementPolicy,
+    RequestBatch,
+    TemporalPolicy,
+)
+from repro.serve.streams import deferrable_stream_multiday, forecast_scenario
+
+ARCH = "h2o-danube-1.8b"
+N_REGIONS = len(DEFAULT_REGIONS)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def base(cfg):
+    return FleetRouter(cfg)
+
+
+def _grid2():
+    return CarbonGrid.fully_connected(DEFAULT_REGIONS, latency_penalty=1.05,
+                                      n_days=2)
+
+
+class TestForecastGrid:
+    def test_table_forecast_defaults_to_actual(self):
+        g = _grid2()
+        assert g.ci_forecast is None
+        assert g.table_forecast is g.table or np.array_equal(
+            np.asarray(g.table_forecast), np.asarray(g.table))
+
+    def test_forecast_from_actual_error_grows_with_lead(self):
+        g = _grid2().forecast_from_actual(0.05, seed=3)
+        fc = np.asarray(g.ci_forecast)
+        act = np.asarray(g.ci_hourly)
+        rel = np.abs(fc / act - 1.0)
+        # near-term hours are near-exact, the far tail is noisy
+        assert rel[:, :2].mean() < rel[:, -12:].mean()
+        assert rel[:, 0].max() < 1e-6  # lead 0: forecast == actual
+
+    def test_roll_reveals_actuals(self):
+        g = _grid2().forecast_from_actual(0.05, seed=3)
+        r = g.roll(30)
+        fc = np.asarray(r.ci_forecast)
+        act = np.asarray(r.ci_hourly)
+        np.testing.assert_allclose(fc[:, :31], act[:, :31], rtol=1e-6)
+        assert not np.allclose(fc[:, 31:], act[:, 31:])
+
+    def test_with_forecast_validates_shape(self):
+        g = _grid2()
+        with pytest.raises(ValueError, match="ci_forecast"):
+            g.with_forecast(np.zeros((N_REGIONS, 24)))
+
+    def test_scaled_days_matches_day_scale_shim(self):
+        a = CarbonGrid.fully_connected(DEFAULT_REGIONS, n_days=2,
+                                       day_scale=(1.0, 0.8))
+        b = CarbonGrid.fully_connected(DEFAULT_REGIONS).repeat(
+            2).scaled_days((1.0, 0.8))
+        np.testing.assert_array_equal(np.asarray(a.ci_hourly),
+                                      np.asarray(b.ci_hourly))
+        np.testing.assert_array_equal(np.asarray(a.table),
+                                      np.asarray(b.table))
+
+
+class TestZeroErrorParity:
+    """Acceptance: with ``ci_forecast == ci_actual`` and zero risk penalty
+    the forecast-split code path reproduces the error-blind engine's
+    decisions bit-for-bit — the split must be inert when the forecast is
+    perfect."""
+
+    @staticmethod
+    def _assert_temporal_parity(seed, cap, n=800):
+        cfg = get_config(ARCH)
+        base = FleetRouter(cfg)
+        batch, region, t_hours = deferrable_stream_multiday(
+            n, N_REGIONS, n_days=2, seed=seed)
+        g = _grid2()
+        g_eq = g.with_forecast(g.ci_hourly)  # explicit forecast == actual
+        caps = np.full((N_REGIONS, 3), float(cap))
+        mk = lambda: TemporalPolicy(OraclePolicy(base.infra), caps,
+                                    max_defer_h=12, risk_lambda=0.0)
+        ra, sa = FleetRouter(cfg, grid=g, policy=mk()) \
+            .route_stream_with_state(batch, region, t_hours)
+        rb, sb = FleetRouter(cfg, grid=g_eq, policy=mk()) \
+            .route_stream_with_state(batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(ra.target),
+                                      np.asarray(rb.target))
+        np.testing.assert_array_equal(np.asarray(ra.exec_region),
+                                      np.asarray(rb.exec_region))
+        np.testing.assert_array_equal(np.asarray(sa.exec_hour),
+                                      np.asarray(sb.exec_hour))
+        np.testing.assert_array_equal(np.asarray(sa.shed),
+                                      np.asarray(sb.shed))
+        np.testing.assert_array_equal(np.asarray(ra.carbon_g),
+                                      np.asarray(rb.carbon_g))
+
+    @pytest.mark.parametrize("seed,cap", [(0, np.inf), (3, 40.0)])
+    def test_temporal_bit_for_bit_pinned(self, seed, cap):
+        self._assert_temporal_parity(seed, cap)
+
+    @hypothesis.settings(max_examples=4, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 10),
+                      cap=st.one_of(st.just(np.inf), st.integers(20, 60)))
+    def test_temporal_bit_for_bit_property(self, seed, cap):
+        self._assert_temporal_parity(seed, float(cap))
+
+    def test_placement_bit_for_bit(self, cfg, base):
+        n = 1500
+        batch, region, t_hours = deferrable_stream_multiday(
+            n, N_REGIONS, n_days=2, seed=7)
+        g = _grid2()
+        g_eq = g.with_forecast(g.ci_hourly)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        ra = FleetRouter(cfg, grid=g, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps)).route_stream(
+            batch, region, t_hours)
+        rb = FleetRouter(cfg, grid=g_eq, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps)).route_stream(
+            batch, region, t_hours)
+        np.testing.assert_array_equal(np.asarray(ra.target),
+                                      np.asarray(rb.target))
+        np.testing.assert_array_equal(np.asarray(ra.carbon_g),
+                                      np.asarray(rb.carbon_g))
+
+    def test_sigma_zero_forecast_is_inert(self):
+        """``forecast_from_actual(0.0)`` attaches nothing at all — the
+        zero-error forecast IS the actual table object."""
+        g = _grid2().forecast_from_actual(0.0)
+        assert g.ci_forecast is None
+
+
+class TestRollingPlanner:
+    def test_requires_temporal_policy(self, cfg, base):
+        n = 64
+        batch, region, t_hours, grid = forecast_scenario(
+            n, DEFAULT_REGIONS, sigma_h=0.03, seed=0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        fr = FleetRouter(cfg, grid=grid, policy=PlacementPolicy(
+            OraclePolicy(base.infra), caps))
+        with pytest.raises(ValueError, match="TemporalPolicy"):
+            fr.route_stream_rolling(batch, region, t_hours)
+
+    def test_conservation_and_deadlines(self, cfg, base):
+        """Every request is committed exactly once (routed + shed == total,
+        planned == committed + held per step), commitments respect the
+        absolute deadline, and nothing executes before it arrives."""
+        n = 1200
+        batch, region, t_hours, grid = forecast_scenario(
+            n, DEFAULT_REGIONS, sigma_h=0.06, seed=1)
+        caps = np.full((N_REGIONS, 3), 25.0)
+        fr = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        roll = fr.route_stream_rolling(batch, region, t_hours, step_h=6)
+        arr = np.floor(t_hours).astype(np.int32)
+        slack = np.minimum(batch.slack_h, 12)
+        live = ~roll.shed
+        assert int(roll.shed.sum()) + int(live.sum()) == n
+        for s in roll.steps:
+            assert s.planned == s.committed + s.held
+        assert sum(s.committed for s in roll.steps) == n
+        assert (roll.exec_hour[live] >= arr[live]).all()
+        assert (roll.exec_hour[live] <= arr[live] + slack[live]).all()
+        assert (roll.exec_hour < grid.horizon_h).all()
+        np.testing.assert_array_equal(
+            roll.defer_hours[live], roll.exec_hour[live] - arr[live])
+        assert roll.total_carbon_g >= roll.routed_carbon_g >= 0.0
+
+    def test_perfect_forecast_rolling_matches_decisions(self, cfg, base):
+        """With zero forecast error every plan step sees the truth, so the
+        rolling planner's committed carbon can't be (much) worse than the
+        one-shot plan — re-planning on a perfect forecast only re-derives
+        the same preferences (commit batching can differ under caps, so
+        this is an uncapped check)."""
+        n = 1000
+        batch, region, t_hours, grid = forecast_scenario(
+            n, DEFAULT_REGIONS, sigma_h=0.0, seed=2)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        fr = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        one = fr.route_stream(batch, region, t_hours)
+        roll = fr.route_stream_rolling(batch, region, t_hours, step_h=6)
+        assert roll.shed_count == int(one.shed_count) == 0
+        np.testing.assert_allclose(
+            roll.routed_carbon_g, float(one.routed_carbon_g), rtol=1e-3)
+
+
+class TestEmissionsLedger:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="conserve_scale"):
+            EmissionsLedger(conserve_scale=0.0)
+        with pytest.raises(ValueError, match="spend_scale"):
+            EmissionsLedger(spend_scale=0.5)
+
+    def test_credits_spent_never_exceed_earned(self, cfg, base):
+        n = 1200
+        batch, region, t_hours, grid = forecast_scenario(
+            n, DEFAULT_REGIONS, sigma_h=0.06, seed=0)
+        caps = np.full((N_REGIONS, 3), 25.0)
+        fr = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12))
+        roll = fr.route_stream_rolling(batch, region, t_hours, step_h=6,
+                                       ledger=EmissionsLedger())
+        earned = np.sum([s.earned for s in roll.steps], axis=0)
+        spent = np.sum([s.spent for s in roll.steps], axis=0)
+        assert (spent <= earned + 1e-9).all()
+        # running balance never goes negative either
+        bal = np.zeros(N_REGIONS)
+        for s in roll.steps:
+            bal = bal + s.earned - s.spent
+            assert (bal >= -1e-9).all()
+        # the ledger actually moved capacity at least once on this stream
+        scales = np.stack([s.cap_scale for s in roll.steps])
+        assert (scales != 1.0).any()
+        assert sum(s.committed for s in roll.steps) == n
+
+    def test_cap_scales_pure(self):
+        led = EmissionsLedger(lookahead_h=6)
+        fc = np.ones((2, 24))
+        fc[0, 6:12] = 0.5   # region 0: clean stretch ahead -> conserve
+        fc[1, 6:12] = 2.0   # region 1: dirty stretch ahead -> spend
+        bal = np.array([0.0, 1.0])
+        scale, new_bal, earned, spent = led.cap_scales(fc, 0, 6, bal)
+        assert scale[0] == led.conserve_scale < 1.0
+        assert scale[1] > 1.0
+        assert earned[0] > 0 and spent[0] == 0
+        assert earned[1] == 0 and spent[1] > 0
+        assert new_bal[1] == pytest.approx(1.0 - spent[1])
+
+
+class TestRiskAwareBeatsBlind:
+    """Acceptance: with realistic forecast error, risk-aware forecast-native
+    deferral (rolling re-plan + risk penalty) routes measurably less gCO2
+    than error-blind deferral (one-shot trust in the noisy forecast)."""
+
+    def test_forecast_native_beats_error_blind(self, cfg, base):
+        n = 3000
+        batch, region, t_hours, grid = forecast_scenario(
+            n, DEFAULT_REGIONS, sigma_h=0.06, seed=0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        blind = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12,
+            risk_lambda=0.0))
+        aware = FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=12,
+            risk_lambda=1.0))
+        g_blind = float(blind.route_stream(batch, region,
+                                           t_hours).routed_carbon_g)
+        roll_blind = blind.route_stream_rolling(batch, region, t_hours,
+                                                step_h=6).routed_carbon_g
+        roll_aware = aware.route_stream_rolling(batch, region, t_hours,
+                                                step_h=6).routed_carbon_g
+        # re-planning on the rolling forecast is the headline win (>= 5%)
+        assert roll_aware < 0.95 * g_blind, (roll_aware, g_blind)
+        # and pricing forecast risk into the score helps on top (pinned
+        # seed; the margin is small but deterministic)
+        assert roll_aware < roll_blind, (roll_aware, roll_blind)
+
+
+class TestNonWrappingTail:
+    """Acceptance: candidates beyond the horizon are never wrapped to
+    hour 0 — tail arrivals with deferral windows past H execute within
+    [arrival, H) or shed; they never borrow day-one CI or budgets."""
+
+    @staticmethod
+    def _tail_batch(n, slack):
+        return RequestBatch(
+            prompt_tokens=np.full(n, 4096.0),  # never fits on-device
+            max_new_tokens=np.full(n, 64.0),
+            latency_budget_s=np.full(n, 120.0),
+            bytes_per_token=np.full(n, 4.0),
+            available=np.tile([False, True, True], (n, 1)),
+            slack_hours=np.full(n, float(slack)))
+
+    def test_tail_arrivals_never_wrap(self, cfg, base):
+        """Hour-23 arrivals with 10h slack on a 1-day grid: hour 23 is the
+        only in-horizon candidate even though hours 0-9 of 'tomorrow'
+        (aliased day one) are far cleaner — the old wrap exploited them."""
+        n = 40
+        batch = self._tail_batch(n, slack=10)
+        region = np.zeros(n, np.int64)
+        t = np.full(n, 23.5)
+        grid = CarbonGrid.from_regions(DEFAULT_REGIONS[:1])
+        caps = np.full((1, 3), np.inf)
+        fr = FleetRouter(cfg, regions=DEFAULT_REGIONS[:1], grid=grid,
+                         policy=TemporalPolicy(OraclePolicy(base.infra),
+                                               caps, max_defer_h=10))
+        res, state = fr.route_stream_with_state(batch, region, t)
+        eh = np.asarray(state.exec_hour)
+        assert (eh == 23).all()  # never hour 0..9
+        assert (np.asarray(state.defer_hours) == 0).all()
+        assert int(res.shed_count) == 0  # uncapped: executes, doesn't shed
+
+    def test_tail_arrivals_shed_when_cell_full(self, cfg, base):
+        """Same tail arrivals under a full hour-23 cell: with the window
+        past H refused, the overflow SHEDS instead of wrapping into empty
+        hour-0 budgets."""
+        n = 40
+        cap = 15.0
+        batch = self._tail_batch(n, slack=10)
+        # close the hyper tier so hour 23's edge cell is the only candidate
+        batch = dataclasses.replace(
+            batch, available=np.tile([False, True, False], (n, 1)))
+        region = np.zeros(n, np.int64)
+        t = np.full(n, 23.5)
+        grid = CarbonGrid.from_regions(DEFAULT_REGIONS[:1])
+        caps = np.array([[np.inf, cap, np.inf]])
+        fr = FleetRouter(cfg, regions=DEFAULT_REGIONS[:1], grid=grid,
+                         policy=TemporalPolicy(OraclePolicy(base.infra),
+                                               caps, max_defer_h=10))
+        res, state = fr.route_stream_with_state(batch, region, t)
+        assert int(res.shed_count) == n - int(cap)
+        eh = np.asarray(state.exec_hour)
+        assert (eh == 23).all()  # shed rows report arrival hour, no wrap
+
+    def test_two_day_grid_restores_the_candidates(self, cfg, base):
+        """The sanctioned replacement for the wrap: carry the real next
+        day. The same stream on a 2-day grid defers into day-two hours."""
+        n = 40
+        batch = self._tail_batch(n, slack=10)
+        region = np.zeros(n, np.int64)
+        t = np.full(n, 23.5)
+        grid = CarbonGrid.from_regions(DEFAULT_REGIONS[:1], n_days=2)
+        caps = np.full((1, 3), np.inf)
+        fr = FleetRouter(cfg, regions=DEFAULT_REGIONS[:1], grid=grid,
+                         policy=TemporalPolicy(OraclePolicy(base.infra),
+                                               caps, max_defer_h=10))
+        res, state = fr.route_stream_with_state(batch, region, t)
+        eh = np.asarray(state.exec_hour)
+        assert (eh >= 23).all()
+        assert (eh[~np.asarray(state.shed)] > 23).any()  # rides day two

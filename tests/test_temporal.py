@@ -82,6 +82,16 @@ def xgrid():
     return CarbonGrid.fully_connected(DEFAULT_REGIONS, latency_penalty=1.05)
 
 
+@pytest.fixture(scope="module")
+def xgrid2():
+    """Two repeated-diurnal days: the horizon tail is non-wrapping, so a
+    stream whose deadline windows cross midnight needs the grid to carry
+    the next day's hours (same CI, fresh capacity cells) — the explicit
+    replacement for the retired wrap-into-hour-0 aliasing."""
+    return CarbonGrid.fully_connected(DEFAULT_REGIONS, latency_penalty=1.05,
+                                      n_days=2)
+
+
 class TestValidation:
     def test_rejects_non_factorizable_inner(self, base):
         caps = np.full((N_REGIONS, 3), np.inf)
@@ -259,17 +269,20 @@ class TestDeferralWins:
         assert (defer[batch.slack_h == 0] == 0).all()
 
     def test_capped_joint_beats_spatial_and_sheds_no_more(self, cfg, base,
-                                                          xgrid):
+                                                          xgrid2):
         """Moderate cap pressure: deferral drains the evening peak into
         later windows, so the joint policy both routes greener and sheds
-        less than space-only spill."""
+        less than space-only spill. Runs on a 2-day repeated-diurnal grid:
+        evening arrivals defer across midnight into day two's (identical)
+        morning CI — under the non-wrapping tail, candidates past the
+        horizon are refused, so the grid must carry those hours."""
         n = 3000
         batch, region, t_hours = deferrable_stream(n, N_REGIONS, seed=0)
         caps = np.full((N_REGIONS, 3), np.inf)
         caps[:, 1] = caps[:, 2] = max(1.0, 0.6 * n / (N_REGIONS * 24))
-        place = FleetRouter(cfg, grid=xgrid, policy=PlacementPolicy(
+        place = FleetRouter(cfg, grid=xgrid2, policy=PlacementPolicy(
             OraclePolicy(base.infra), caps))
-        temp = FleetRouter(cfg, grid=xgrid, policy=TemporalPolicy(
+        temp = FleetRouter(cfg, grid=xgrid2, policy=TemporalPolicy(
             OraclePolicy(base.infra), caps, max_defer_h=12))
         rp = place.route_stream(batch, region, t_hours)
         rt = temp.route_stream(batch, region, t_hours)
@@ -587,10 +600,12 @@ class TestMultiDayHorizon:
         return caps, batch, region, t, b_rows
 
     def test_day_boundary_aliasing_regression(self, cfg, base):
-        """The modulo-24 capacity bug, demonstrated and fixed: on a
-        single-day grid B's past-midnight candidates alias into day one's
-        spent hour-0/1 cells and B is shed; on the 2-day grid the same
-        deferral lands in day-two cells (fresh budgets) and routes."""
+        """The horizon tail, non-wrapping: on a single-day grid B's
+        past-midnight candidate hours (24, 25) are REFUSED — never aliased
+        into day one's spent (or empty) hour-0/1 cells — so B and C's 18
+        contenders share only hour 23's cap of 10 and exactly 8 shed, all
+        executing/shedding at their arrival hour. On the 2-day grid the
+        same deferral lands in day-two cells (fresh budgets) and routes."""
         caps, batch, region, t, b_rows = self._midnight_scenario()
         regions = DEFAULT_REGIONS[:1]
 
@@ -601,9 +616,14 @@ class TestMultiDayHorizon:
             return fr.route_stream_with_state(batch, region, t)
 
         r1, s1 = route(CarbonGrid.from_regions(regions))
-        # single-day horizon: aliasing shows as shed — B's candidates all
-        # map onto full cells even though tomorrow's cells are empty
-        assert int(np.asarray(s1.shed)[b_rows].sum()) == len(batch) - 30 == 8
+        shed1 = np.asarray(s1.shed)
+        eh1 = np.asarray(s1.exec_hour)
+        assert int(shed1.sum()) == len(batch) - 30 == 8
+        # tail arrivals never wrap into hour 0: every hour-23 arrival
+        # (B and C alike) executes or sheds at hour 23, and day-one's
+        # early cells hold exactly A's 20 admissions
+        assert (eh1[20:] == 23).all()
+        assert (np.asarray(s1.defer_hours) == 0).all()
 
         r2, s2 = route(CarbonGrid.from_regions(regions, n_days=2))
         shed_b = np.asarray(s2.shed)[b_rows]
