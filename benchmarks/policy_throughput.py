@@ -51,6 +51,17 @@ rolling risk-aware re-planner (``route_stream_rolling`` + the
 gCO2 than immediate routing — `benchmarks.run` turns an assertion into a
 failing CI job.
 
+A sixth section is the ISSUE-7 continuous-batching queue pin. At full n
+the raw serve loop (``repro.serve.queue.serve_stream``: EDF batch
+formation, live ``WorkerPool`` slots through the cap_scale seam, per-step
+commits) drains the diurnal stream — the >= 0.3M req/s acceptance. At
+min(n, 30k) the online-refit gap trio routes the multiday joint-deferral
+stream through the SAME queue loop: the static offline-fitted
+classification policy vs. the ``OnlineRefitter`` hot-swap loop vs. the
+oracle, reporting req/s + routed gCO2 + the fraction of the
+static-vs-oracle gap the refit closes. ASSERTS refit routes no dirtier
+than static — the `--smoke` CI gate.
+
 Run:  PYTHONPATH=src python -m benchmarks.policy_throughput [--n 1000000]
 """
 
@@ -77,9 +88,12 @@ from repro.serve import (
     EmissionsLedger,
     FleetRouter,
     LearnedPolicy,
+    OnlineRefitter,
     OraclePolicy,
     PlacementPolicy,
     TemporalPolicy,
+    WorkerPool,
+    serve_stream,
 )
 from repro.serve.streams import (
     deferrable_stream,
@@ -164,6 +178,7 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
     rows += temporal_rows(cfg, infra, n=min(n, 200_000), reps=reps)
     rows += multiday_rows(cfg, infra, train, n=n, reps=reps)
     rows += forecast_rows(cfg, infra, n=min(n, 50_000), reps=reps)
+    rows += queue_rows(cfg, infra, train, n=n, reps=reps)
     return rows
 
 
@@ -323,6 +338,7 @@ def multiday_rows(cfg, infra, train, n: int, reps: int = 1
     temporal = [
         ("multiday_joint_oracle", grid2, OraclePolicy(infra)),
         ("multiday_joint_learned_classification", grid2, learned_lin),
+        ("multiday_joint_learned_regression", grid2, learned_gen),
         ("multiday_joint_oracle_cleaner_day2", grid2c, OraclePolicy(infra)),
     ]
     oracle_us = oracle_g = None
@@ -398,6 +414,94 @@ def forecast_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
     assert g_rl < g_im, (
         f"forecast-aware rolling deferral ({g_rl:.4g} g) failed to beat "
         f"immediate routing ({g_im:.4g} g) at sigma_h=0.03")
+    return rows
+
+
+def queue_rows(cfg, infra, train, n: int, reps: int = 1) -> list[BenchRow]:
+    """ISSUE-7 continuous-batching queue: serve-loop throughput at full n
+    (the >= 0.3M req/s acceptance) + the online-refit gap trio on the
+    multiday joint-deferral stream at min(n, 30k). ASSERTS refit routes no
+    dirtier than the static offline-fitted classification policy through
+    the same queue loop — ``benchmarks.run --smoke`` turns the assertion
+    into a failing CI job."""
+    base = FleetRouter(cfg)
+    n_regions = len(base.regions)
+
+    # --- full-n: raw serve-loop throughput through live worker slots -----
+    batch, region, t_hours = diurnal_stream(n, n_regions)
+    xgrid = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05)
+    unit = np.ones((n_regions, 3))  # pool slots ARE the caps (cap_scale)
+    fr = FleetRouter(cfg, grid=xgrid,
+                     policy=PlacementPolicy(OraclePolicy(infra), unit))
+
+    def mk_pool():
+        pool = WorkerPool(n_regions, slots_per_worker=30_000.0,
+                          launch_delay_steps=0)
+        for r in range(n_regions):
+            for tier in (1, 2):
+                pool.launch(r, tier, n=2)
+        return pool
+
+    res = serve_stream(fr, batch, region, t_hours, pool=mk_pool())  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = serve_stream(fr, batch, region, t_hours, pool=mk_pool())
+    dt = (time.perf_counter() - t0) / reps
+    rows = [BenchRow(
+        "queue_throughput", dt / n * 1e6,
+        f"req/s={n / dt:.0f} routed_g={float(res.routed_carbon_g):.4g} "
+        f"shed={res.shed_count} steps={len(res.steps)} "
+        f"batches={sum(s.n_batches for s in res.steps)}")]
+
+    # --- reduced-n: static-learned vs online-refit vs oracle -------------
+    n_q = min(n, 30_000)
+    bq, rq, tq = deferrable_stream_multiday(n_q, n_regions, n_days=2)
+    grid2 = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05,
+                                       n_days=2)
+    caps = np.full((n_regions, 3), np.inf)
+    caps[:, 1] = caps[:, 2] = max(1.0, 0.6 * n_q / (n_regions * 48))
+    static = LearnedPolicy.fit(ClassificationScheduler(carbon_head=False),
+                               train, infra=infra)
+
+    def q_serve(inner, refitter=None):
+        frq = FleetRouter(cfg, grid=grid2, policy=TemporalPolicy(
+            inner, caps, max_defer_h=16))
+        t0 = time.perf_counter()
+        resq = serve_stream(frq, bq, rq, tq, step_h=2, refitter=refitter)
+        return time.perf_counter() - t0, resq
+
+    mk_refitter = lambda: OnlineRefitter(
+        min_observations=max(256, n_q // 12),
+        refit_every=max(512, n_q // 6))
+    configs = [
+        ("queue_static_learned", lambda: q_serve(static)),
+        ("queue_online_refit", lambda: q_serve(static, mk_refitter())),
+        ("queue_oracle", lambda: q_serve(OraclePolicy(infra))),
+    ]
+    g = {}
+    for name, fn in configs:
+        fn()  # compile + warm (fresh refitter per run: cold replay state)
+        dt, resq = fn()
+        g[name] = float(resq.routed_carbon_g)
+        extra = ""
+        if name == "queue_online_refit":
+            extra = f" refits={resq.refits}"
+        elif name == "queue_oracle":
+            gap = g["queue_static_learned"] - g[name]
+            closed = (g["queue_static_learned"]
+                      - g["queue_online_refit"]) / max(gap, 1e-9)
+            extra = f" refit_gap_closed={closed:.1%}"
+        rows.append(BenchRow(
+            name, dt / n_q * 1e6,
+            f"req/s={n_q / dt:.0f} routed_g={g[name]:.4g} "
+            f"shed={resq.shed_count}{extra}"))
+
+    # the ISSUE-7 CI gate: learning from the live stream must not route
+    # dirtier than the static offline fit it started from
+    assert g["queue_online_refit"] <= g["queue_static_learned"] * 1.001, (
+        f"online refit ({g['queue_online_refit']:.4g} g) routed dirtier "
+        f"than the static learned policy "
+        f"({g['queue_static_learned']:.4g} g)")
     return rows
 
 

@@ -200,15 +200,29 @@ class ClassificationScheduler:
     Linear, closed-form — exactly the class of model the paper reports as
     'failing to accurately model the non-linear relationship' of CI and
     variance features (Fig 14): it tops out below the RL agent.
+
+    ``carbon_head=True`` (the default) adds a carbon-regression head: a
+    ridge fit of per-target log-carbon alongside the one-vs-rest logits,
+    blended into the score as ``-logit + head_weight * log_cf_hat``. The
+    logits alone pick the *class* but carry no carbon *magnitude*, so on
+    candidate (region, hour) lattices the classifier can't tell a slightly
+    dirtier hour from a much dirtier one — the learned-carbon-quality gap.
+    Both terms are affine in the features, so ``ci_linear`` scoring (the
+    probed-sensitivity einsum) survives the head; ``carbon_head=False``
+    reproduces the paper's pure-logit configuration bit-for-bit.
     """
 
     name = "classification"
-    #: -(Xb @ W) is affine in the features: candidate (region, hour) CI
-    #: deltas collapse to one einsum in LearnedPolicy.pair_scores_from_factors
+    #: -(Xb @ W) + head_w * (Xb @ W_cf) is affine in the features: candidate
+    #: (region, hour) CI deltas collapse to one einsum in
+    #: LearnedPolicy.pair_scores_from_factors
     ci_linear = True
 
-    def __init__(self, ridge: float = 1e-2):
+    def __init__(self, ridge: float = 1e-2, carbon_head: bool = True,
+                 head_weight: float = 1.0):
         self.ridge = ridge
+        self.carbon_head = carbon_head
+        self.head_weight = head_weight
 
     def fit_params(self, train: SchedulerDataset) -> dict:
         X = jnp.asarray(train.features)
@@ -216,13 +230,25 @@ class ClassificationScheduler:
         # LS-SVM targets: +1 for the class, -1 otherwise
         Y = 2.0 * jax.nn.one_hot(jnp.asarray(train.labels), 3) - 1.0
         d = Xb.shape[1]
-        W = jnp.linalg.solve(Xb.T @ Xb + self.ridge * len(Xb) * jnp.eye(d),
-                             Xb.T @ Y)
-        return {"W": W}
+        gram = Xb.T @ Xb + self.ridge * len(Xb) * jnp.eye(d)
+        W = jnp.linalg.solve(gram, Xb.T @ Y)
+        if not self.carbon_head:
+            return {"W": W}
+        # carbon magnitude alongside the logits: per-target log-carbon ridge
+        # (the RegressionScheduler's carbon half, without the latency step
+        # that breaks affinity)
+        W_cf = jnp.linalg.solve(gram, Xb.T @ jnp.log(
+            jnp.asarray(train.total_cf) + 1e-9))
+        return {"W": W, "W_cf": W_cf,
+                "head_w": jnp.asarray(self.head_weight, jnp.float32)}
 
     @staticmethod
     def jax_scores(params: dict, X: jax.Array) -> jax.Array:
-        return -(_with_bias(X) @ params["W"])  # argmin(-logit) = argmax(logit)
+        Xb = _with_bias(X)
+        s = -(Xb @ params["W"])  # argmin(-logit) = argmax(logit)
+        if "W_cf" in params:  # host-static: headless params skip the blend
+            s = s + params["head_w"] * (Xb @ params["W_cf"])
+        return s
 
     def fit_predict(self, train, test) -> FitResult:
         params = self.fit_params(train)
@@ -230,7 +256,8 @@ class ClassificationScheduler:
             self.jax_scores(params, jnp.asarray(test.features)), -1))
         n, f = train.features.shape
         return FitResult(pred, float(2 * n * f * f + f ** 3),
-                         flops_per_decision=2.0 * f * 3)
+                         flops_per_decision=2.0 * f
+                         * (6 if self.carbon_head else 3))
 
 
 class BOScheduler:

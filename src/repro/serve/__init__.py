@@ -1,6 +1,7 @@
 """Serving: batched engine, GreenScale routers, pluggable routing policies,
-the geo-temporal placement layer, the temporal deferral engine, and the
-rolling forecast-native re-planner."""
+the geo-temporal placement layer, the temporal deferral engine, the rolling
+forecast-native re-planner, and the continuous-batching request queue with
+online policy refit."""
 
 from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
 from repro.serve.engine import ServeEngine
@@ -8,6 +9,19 @@ from repro.serve.forecast import (
     EmissionsLedger,
     LedgerStep,
     RollingRouteResult,
+    pad_pow2,
+    slice_batch,
+)
+from repro.serve.online import OnlineRefitter, ReplayBuffer
+from repro.serve.queue import (
+    BatchFormer,
+    FormedBatch,
+    QueueServeResult,
+    QueueStep,
+    RequestQueue,
+    WorkerPool,
+    admit_batches,
+    serve_stream,
 )
 from repro.serve.placement import (
     PlacementPolicy,

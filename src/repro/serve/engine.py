@@ -39,6 +39,12 @@ class ServeEngine:
     #: execution tier this engine instance serves (Target enum value); None
     #: means the engine accepts everything (single-tier deployments).
     tier: int | None = None
+    #: concurrent KV-cache slots this instance can hold (decode states live
+    #: for a request's whole lifetime, so slots — not FLOPs — bound the
+    #: batch). None = unbounded (the historical single-batch behaviour).
+    #: The KV *token* budget is ``kv_slots * max_seq``; the queue's batch
+    #: former sizes sub-batches against both (``kv_fit_rows``).
+    kv_slots: int | None = None
 
     def __post_init__(self):
         cfg, use_pallas = self.cfg, self.use_pallas
@@ -73,6 +79,27 @@ class ServeEngine:
         """Host-side row indices of the admitted requests (gather order is
         stable, so batch slots map back to stream positions)."""
         return np.nonzero(np.asarray(self.admit(targets)))[0]
+
+    @property
+    def kv_token_budget(self) -> float:
+        """Total KV tokens this instance can hold (inf when unbounded)."""
+        if self.kv_slots is None:
+            return float("inf")
+        return float(self.kv_slots) * float(self.max_seq)
+
+    def kv_fit_rows(self, seq_lens: np.ndarray) -> int:
+        """How many leading rows of ``seq_lens`` (per-request prompt+decode
+        token counts, in the order the batch former proposes them) fit this
+        engine's KV capacity: at most ``kv_slots`` concurrent requests AND
+        at most ``kv_slots * max_seq`` total tokens, each row clamped to
+        ``max_seq`` (a longer request occupies one full slot). The host-side
+        sizing hook for KV-aware batch formation."""
+        seq = np.minimum(np.asarray(seq_lens, np.float64), self.max_seq)
+        if self.kv_slots is None:
+            return len(seq)
+        n_rows = min(len(seq), int(self.kv_slots))
+        fits = np.cumsum(seq[:n_rows]) <= self.kv_token_budget
+        return int(fits.sum())
 
     def prefill_batch(self, tokens: jax.Array, **extras
                       ) -> tuple[jax.Array, DecodeState]:

@@ -131,7 +131,7 @@ class RollingRouteResult:
         return int(((self.defer_hours > 0) & ~self.shed).sum())
 
 
-def _pad_pow2(n: int, lo: int = 16) -> int:
+def pad_pow2(n: int, lo: int = 16) -> int:
     """Sub-batch bucket size: next power of two >= max(n, lo) — bounds the
     number of distinct jit shapes the per-step re-plans can trigger."""
     p = lo
@@ -140,7 +140,7 @@ def _pad_pow2(n: int, lo: int = 16) -> int:
     return p
 
 
-def _slice_batch(batch, idx: np.ndarray, pad_to: int):
+def slice_batch(batch, idx: np.ndarray, pad_to: int):
     """Row-slice a ``RequestBatch`` and pad it to ``pad_to`` rows with
     unroutable dummies (no tier available -> they bypass capacity and are
     dropped on unpad)."""
@@ -243,8 +243,8 @@ def route_stream_rolling(fr, batch, region, t_hours, *, step_h: int = 6,
 
         eff_hour = np.maximum(arr_hour[idx], now).astype(np.int32)
         eff_slack = np.maximum(deadline[idx] - eff_hour, 0).astype(np.int32)
-        pad_to = _pad_pow2(len(idx))
-        sub = _slice_batch(batch, idx, pad_to)
+        pad_to = pad_pow2(len(idx))
+        sub = slice_batch(batch, idx, pad_to)
         sub_region = np.concatenate(
             [region_np[idx], np.zeros(pad_to - len(idx), np.int32)])
         sub_hour = np.concatenate(

@@ -420,14 +420,22 @@ class PlacementPolicy(RoutingPolicy):
             inv = jnp.asarray(inv_order, jnp.int32)
         return order, inv
 
+    def _caps_runtime(self, cap_scale) -> jax.Array:
+        """(R, 3) effective caps: the configured caps scaled by ``cap_scale``
+        — a per-region (R,) multiplier (the rolling re-planner's emissions
+        budget) or a full (R, 3) per-(region, tier) matrix (the
+        ``WorkerPool`` live-slot seam: caps of 1.0 turn the scale into the
+        live slot count itself). ``None`` = the configured caps,
+        bit-for-bit. The ndim branch is host-static, so both shapes share
+        one compiled program per shape."""
+        if cap_scale is None:
+            return self._caps
+        cs = jnp.asarray(cap_scale, jnp.float32)
+        return self._caps * (cs[:, None] if cs.ndim == 1 else cs)
+
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
                factors=None, fc_table=None, cap_scale=None, used0=None):
-        if cap_scale is not None or used0 is not None:
-            raise ValueError(
-                "cap_scale / used0 are rolling re-planner inputs only "
-                "TemporalPolicy implements — PlacementPolicy admits "
-                "against its fixed caps")
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:
@@ -439,6 +447,7 @@ class PlacementPolicy(RoutingPolicy):
         win = hr % self.n_windows
         order, inv = self._to_stream_order(n, win, home, order, inv_order)
 
+        caps_rt = self._caps_runtime(cap_scale)
         if self._diag_only:
             # Tier-only spill: the home region is the only candidate. The
             # diagonal latency penalty scales a request's whole row by one
@@ -446,12 +455,14 @@ class PlacementPolicy(RoutingPolicy):
             # so the scores stay bit-identical to CapacityLimiter's.
             s = scores_with_reuse(self.inner, w, env, avail, hour,
                                   outputs)  # (N, 3)
-            return self._decide_diag(s, win, home, order, inv, state)
+            return self._decide_diag(s, win, home, order, inv, state,
+                                     caps_rt, used0)
         if self._use_factors(factors):
             s = self._cross_scores_factorized(
                 factors, w, env, avail, home, hr,
                 fc_table=fc_table).reshape(n, n_pairs)
-            return self._decide_cross(s, win, home, order, inv, state)
+            return self._decide_cross(s, win, home, order, inv, state,
+                                      caps_rt, used0)
         # non-factorizable inner policy: the verbatim PR-3 program (one
         # Table-1 sweep per candidate region, fixed-round admission). The
         # sweep has no rtt_s seam, so a WAN-hop grid must not silently
@@ -465,14 +476,20 @@ class PlacementPolicy(RoutingPolicy):
                 "FleetRouter (which precomputes factors) or give the "
                 "inner policy an infra (LearnedPolicy.fit(..., infra=))")
         s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
-        return self._decide_cross_legacy(s, win, home, order, inv, state)
+        return self._decide_cross_legacy(s, win, home, order, inv, state,
+                                         caps_rt, used0)
 
-    def _decide_diag(self, s, win, home, order, inv, state):
+    def _decide_diag(self, s, win, home, order, inv, state,
+                     caps_rt=None, used0=None):
         """Tier-only admission: the PR-2/PR-3 segment-rank program,
         unchanged — 3 unrolled spill rounds marching each request down its
-        preference list, bit-for-bit CapacityLimiter parity."""
+        preference list, bit-for-bit CapacityLimiter parity. ``caps_rt``
+        (None = the configured caps) and ``used0`` (None = fresh cells) are
+        the runtime-capacity seams of the serving loop."""
         n = s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        if caps_rt is None:
+            caps_rt = self._caps
         # Admission segments: (window, home) cells of width 3 — all of a
         # request's candidate cells live in its own segment. The flat cell
         # id is win * n_pairs + home * 3 + tier, so ``used`` / ``caps``
@@ -488,10 +505,13 @@ class PlacementPolicy(RoutingPolicy):
         col_base_s = home_s * N_TARGETS  # pref_s columns are tiers
         starts = jnp.searchsorted(seg_s, jnp.arange(n_segments))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
-        caps_flat = self._caps.reshape(-1)
+        caps_flat = caps_rt.reshape(-1)
         caps_cell = jnp.tile(caps_flat, self.n_windows)
 
-        used = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        used_init = (jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+                     if used0 is None
+                     else jnp.asarray(used0, jnp.float32).reshape(-1))
+        used = used_init
         placed = jnp.zeros((n,), bool)
         exec_pair = jnp.zeros((n,), jnp.int32)
         for k in range(N_TARGETS):
@@ -527,7 +547,7 @@ class PlacementPolicy(RoutingPolicy):
 
         shed = shed_s[inv]
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
-        counts = used.reshape(
+        counts = (used - used_init).reshape(
             self.n_windows, n_regions, N_TARGETS).sum(axis=0)
         shed_pair = (jax.nn.one_hot(first_col_s, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(
@@ -540,7 +560,8 @@ class PlacementPolicy(RoutingPolicy):
             exec_region=None,
             shed_pair=state.shed_pair + shed_pair)
 
-    def _decide_cross(self, s, win, home, order, inv, state):
+    def _decide_cross(self, s, win, home, order, inv, state,
+                      caps_rt=None, used0=None):
         """Cross-region admission: skip-full best-open attempts under a
         ``lax.while_loop``. Each round every unplaced request targets its
         best candidate whose cell still has budget (a masked argmin — no
@@ -550,9 +571,13 @@ class PlacementPolicy(RoutingPolicy):
         least one cell per rejected request and the loop terminates with
         the exact shed semantics — a routable request is shed iff every
         finite-score cell is at cap — without a fixed round count. Priority
-        is (attempt round, stream order within the window)."""
+        is (attempt round, stream order within the window). ``caps_rt`` /
+        ``used0`` are the runtime-capacity seams (None = configured caps,
+        fresh cells)."""
         n = s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        if caps_rt is None:
+            caps_rt = self._caps
         win_s, home_s, s_s = win[order], home[order], s[order]
         finite_s = jnp.isfinite(s_s)  # (N, pairs)
         routable = finite_s.any(axis=1)
@@ -562,7 +587,7 @@ class PlacementPolicy(RoutingPolicy):
         seg_s = win_s
         starts = jnp.searchsorted(seg_s, jnp.arange(self.n_windows))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
-        caps_flat = self._caps.reshape(-1)
+        caps_flat = caps_rt.reshape(-1)
         caps_cell = jnp.tile(caps_flat, self.n_windows)
         limit = self.n_windows * n_pairs + 1  # closable cells + 1
 
@@ -595,17 +620,20 @@ class PlacementPolicy(RoutingPolicy):
             # next-round mask either re-aims them or retires them
             return open_mask(used, placed), used, placed, exec_pair, k + 1
 
-        used0 = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        used_init = (jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+                     if used0 is None
+                     else jnp.asarray(used0, jnp.float32).reshape(-1))
         placed0 = jnp.zeros((n,), bool)
         _, used, placed, exec_pair, _ = jax.lax.while_loop(
             cond, body,
-            (open_mask(used0, placed0), used0, placed0,
+            (open_mask(used_init, placed0), used_init, placed0,
              jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)))
         return self._finalize_cross(s_s, home_s, routable, first_col,
-                                    placed, exec_pair, used, inv, state)
+                                    placed, exec_pair, used, inv, state,
+                                    used_init)
 
     def _finalize_cross(self, s_s, home_s, routable, first_col, placed,
-                        exec_pair, used, inv, state):
+                        exec_pair, used, inv, state, used_init=None):
         """Shared shed/fallback + back-to-stream-order tail of both
         cross-region admission programs. Only *routable* leftovers are
         capacity-shed; their nominal placement is the first-choice pair. A
@@ -631,6 +659,8 @@ class PlacementPolicy(RoutingPolicy):
         exec_region = jnp.where(shed_s, home_s,
                                 exec_pair // N_TARGETS)[inv]
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
+        if used_init is not None:
+            used = used - used_init
         counts = used.reshape(
             self.n_windows, n_regions, N_TARGETS).sum(axis=0)
         shed_pair = (jax.nn.one_hot(first_col, n_pairs, dtype=jnp.int32)
@@ -642,7 +672,8 @@ class PlacementPolicy(RoutingPolicy):
             exec_region=exec_region,
             shed_pair=state.shed_pair + shed_pair)
 
-    def _decide_cross_legacy(self, s, win, home, order, inv, state):
+    def _decide_cross_legacy(self, s, win, home, order, inv, state,
+                             caps_rt=None, used0=None):
         """The PR-3 cross-region admission, kept verbatim for inner
         policies without a factorized scorer (and as the benchmark's
         baseline program): best-first preference via a stable (N, pairs)
@@ -651,16 +682,21 @@ class PlacementPolicy(RoutingPolicy):
         stream order); same shed/fallback semantics as ``_decide_cross``."""
         n = s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
+        if caps_rt is None:
+            caps_rt = self._caps
         win_s, home_s, s_s = win[order], home[order], s[order]
         pref_s = jnp.argsort(s_s, axis=1).astype(jnp.int32)
         valid_s = jnp.isfinite(jnp.take_along_axis(s_s, pref_s, axis=1))
         seg_s = win_s
         starts = jnp.searchsorted(seg_s, jnp.arange(self.n_windows))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
-        caps_flat = self._caps.reshape(-1)
+        caps_flat = caps_rt.reshape(-1)
         caps_cell = jnp.tile(caps_flat, self.n_windows)
 
-        used = jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+        used_init = (jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
+                     if used0 is None
+                     else jnp.asarray(used0, jnp.float32).reshape(-1))
+        used = used_init
         placed = jnp.zeros((n,), bool)
         exec_pair = jnp.zeros((n,), jnp.int32)
         for k in range(min(self._n_rounds, n_pairs)):
@@ -676,4 +712,5 @@ class PlacementPolicy(RoutingPolicy):
                 jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals)
 
         return self._finalize_cross(s_s, home_s, valid_s[:, 0], pref_s[:, 0],
-                                    placed, exec_pair, used, inv, state)
+                                    placed, exec_pair, used, inv, state,
+                                    used_init)

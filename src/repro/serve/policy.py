@@ -53,10 +53,12 @@ per-request ``(N, 5)`` — the fleet form — while ``interference`` /
       forecast-native policies score candidate hours on, while routed carbon
       is charged at actuals; None means score on the grid's own forecast
       view (which IS the actual table when no forecast is attached).
-      ``cap_scale`` ((R,) float32) and ``used0`` (flat pre-consumed window
-      cell counts) are rolling re-planner inputs consumed only by capacity-
-      aware temporal policies: a per-region emissions-budget multiplier on
-      window capacity, and cells already committed by earlier planning
+      ``cap_scale`` ((R,) or (R, 3) float32) and ``used0`` (flat
+      pre-consumed window cell counts) are runtime-capacity inputs consumed
+      by capacity-aware placement/temporal policies: a per-region
+      emissions-budget multiplier (the rolling re-planner) or a live
+      per-(region, tier) worker-slot matrix (the continuous-batching serve
+      loop), and cells already committed by earlier planning/serving
       steps. Policies that don't implement them ignore (or refuse) them.
   ``initial_state(n_regions, n_requests) -> pytree``
       the state to thread into the first ``decide``.

@@ -30,6 +30,7 @@ default is the carbon oracle and reproduces the pre-policy results exactly.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -263,6 +264,23 @@ class GreenScaleRouter:
 # ---------------------------------------------------------------------------
 # Fleet-level routing: many regions, hourly CI traces, aggregate savings
 # ---------------------------------------------------------------------------
+
+
+_admit_windows_warned = False
+
+
+def _warn_admit_windows() -> None:
+    """Warn ONCE per process that bucketed admission is deprecated."""
+    global _admit_windows_warned
+    if not _admit_windows_warned:
+        _admit_windows_warned = True
+        warnings.warn(
+            "hourly-bucketed admit_windows is deprecated: requests arrive "
+            "continuously, not in hour buckets. Serve the stream through "
+            "repro.serve.queue.serve_stream and pass its QueueServeResult "
+            "as queue= (or call repro.serve.queue.admit_batches directly) "
+            "for per-step continuous-batching admission.",
+            DeprecationWarning, stacklevel=3)
 
 
 @jax.tree_util.register_dataclass
@@ -670,12 +688,26 @@ class FleetRouter:
             self, batch, region, t_hours, step_h=step_h, ledger=ledger)
 
     def admit_windows(self, res: FleetRouteResult, t_hours: np.ndarray,
-                      engine, n_windows: int = 24) -> list[np.ndarray]:
+                      engine, n_windows: int = 24, *,
+                      queue=None) -> list[np.ndarray]:
         """Serving side of the windowed loop: per hourly window, the stream
         indices ``engine`` admits (``ServeEngine.admit`` over the routed
         targets, sliced by arrival hour). The same windows the policy's
         ``lax.scan`` walks while deciding — route once, then each tier-pinned
-        engine drains its slice window by window."""
+        engine drains its slice window by window.
+
+        With ``queue=`` (a ``repro.serve.queue.QueueServeResult`` from
+        ``serve_stream``) the call delegates to the continuous-batching
+        path — ``queue.admit_batches`` — returning one index array per
+        SERVE STEP instead of per hourly bucket (``res`` / ``t_hours`` are
+        ignored: the queue result already carries its own commitments and
+        timing). The bucketed path is deprecated in favour of it; without
+        ``queue`` the historical behaviour is kept bit-for-bit, behind a
+        once-per-process ``DeprecationWarning``."""
+        if queue is not None:
+            from repro.serve.queue import admit_batches
+            return admit_batches(queue, engine)
+        _warn_admit_windows()
         hour = np.floor(np.asarray(t_hours)).astype(np.int64) % n_windows
         mask = np.asarray(engine.admit(res.target))
         return [np.nonzero(mask & (hour == h))[0] for h in range(n_windows)]

@@ -45,6 +45,61 @@ def synthetic_stream(rng: np.random.Generator, n: int) -> RequestBatch:
                         bytes_per_token=np.full(n, 4.0), available=avail)
 
 
+def arrival_stream(
+    rate_per_h: float, duration_h: float = 24.0, n_regions: int = 1,
+    seed: int = 0, *, diurnal: bool = True, peak: float = 20.0,
+    spike_at_h: float | None = None, spike_mult: float = 1.0,
+    spike_width_h: float = 1.0,
+    batch_frac: float = 0.0, slack_range_h: tuple[int, int] = (6, 16),
+) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
+    """Continuous-time Poisson arrival process — REAL arrival timestamps,
+    not an hourly histogram: ``(batch, region, t_hours)`` with ``t_hours``
+    sorted event times of an (inhomogeneous) Poisson process over
+    ``[0, duration_h)`` at base intensity ``rate_per_h`` requests/hour.
+
+    ``diurnal=True`` modulates the intensity by the canonical sinusoidal
+    daily curve (same shape as ``diurnal_hours``, peaking at ``peak``);
+    ``spike_at_h`` adds a flash-crowd burst: intensity multiplied by
+    ``spike_mult`` inside a ``spike_width_h``-wide window centred there
+    (the k8s-carbonrouter demand-spike scenario). Sampling is by thinning
+    against the peak intensity, so the process is exact, and the request
+    mix reuses ``synthetic_stream``. A non-zero ``batch_frac`` tags that
+    share of arrivals deferrable with slack from ``slack_range_h`` (and a
+    relaxed latency budget), matching ``deferrable_stream``'s convention.
+    """
+    if rate_per_h <= 0 or duration_h <= 0:
+        raise ValueError("rate_per_h and duration_h must be positive")
+    rng = np.random.default_rng(seed)
+    lam_max = rate_per_h
+    if diurnal:
+        lam_max *= 1.8  # the sinusoid's peak factor
+    if spike_at_h is not None and spike_mult > 1.0:
+        lam_max *= spike_mult
+    n_cand = rng.poisson(lam_max * duration_h)
+    t = np.sort(rng.uniform(0.0, duration_h, n_cand))
+    lam = np.full(n_cand, rate_per_h)
+    if diurnal:
+        lam *= 1.0 + 0.8 * np.cos((t - peak) / 24.0 * 2 * np.pi)
+    if spike_at_h is not None and spike_mult > 1.0:
+        in_spike = np.abs(t - spike_at_h) < 0.5 * spike_width_h
+        lam = np.where(in_spike, lam * spike_mult, lam)
+    keep = rng.uniform(0.0, lam_max, n_cand) < lam  # thinning
+    t_hours = t[keep]
+    n = len(t_hours)
+    batch = synthetic_stream(rng, n)
+    if batch_frac > 0.0:
+        is_batch = rng.random(n) < batch_frac
+        slack = np.where(
+            is_batch,
+            rng.integers(slack_range_h[0], slack_range_h[1] + 1, n),
+            0).astype(np.float64)
+        batch = dataclasses.replace(
+            batch, slack_hours=slack,
+            latency_budget_s=np.where(is_batch, 120.0,
+                                      batch.latency_budget_s))
+    return batch, rng.integers(0, n_regions, n), t_hours
+
+
 def diurnal_stream(n: int, n_regions: int, seed: int = 0
                    ) -> tuple[RequestBatch, np.ndarray, np.ndarray]:
     """(batch, region, t_hours) — the full fleet-stream triple."""

@@ -304,11 +304,11 @@ class TemporalPolicy(PlacementPolicy):
         starts = jnp.searchsorted(seg_s, jnp.arange(n_segments))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
         # cap_scale is the rolling re-planner's per-region emissions-budget
-        # multiplier (conserve ahead of predicted clean windows, spend
-        # ahead of dirty ones); None = the configured caps, bit-for-bit
-        caps_rt = (self._caps if cap_scale is None
-                   else self._caps * jnp.asarray(cap_scale,
-                                                 jnp.float32)[:, None])
+        # multiplier ((R,): conserve ahead of predicted clean windows, spend
+        # ahead of dirty ones) or the serving loop's live per-(region, tier)
+        # worker-slot matrix ((R, 3)); None = the configured caps,
+        # bit-for-bit
+        caps_rt = self._caps_runtime(cap_scale)
         caps_flat = caps_rt.reshape(-1)
         caps_cell = jnp.tile(caps_flat, W)
         limit = W * n_pairs + 1  # closable cells + 1

@@ -230,6 +230,7 @@ class TestAdmission:
         eng.tier = None
         assert bool(np.asarray(eng.admit(np.array([0, 1, 2]))).all())
 
+    @pytest.mark.filterwarnings("ignore::DeprecationWarning")
     def test_admit_windows_partitions_admitted_slice(self, fleet_router):
         """The windowed admission loop: per-hour index lists are disjoint,
         hour-consistent, and union to exactly ServeEngine.admit_indices."""

@@ -1,0 +1,547 @@
+"""Continuous-batching queue tests (ISSUE-7): conservation invariants
+(enqueued == routed + shed + still-queued at every step, property-tested),
+worker-slot admission (no cell exceeds the pool's live slots, drained
+workers accept no new work), EDF batch formation with KV-aware sizing,
+the cap_scale/used0 routing seams' parity, and the ``admit_windows``
+deprecation shim."""
+
+import dataclasses
+import warnings
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serve.router as router_mod
+from repro.configs import get_config
+from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid
+from repro.serve import (
+    BatchFormer,
+    FleetRouter,
+    OraclePolicy,
+    PlacementPolicy,
+    RequestBatch,
+    RequestQueue,
+    ServeEngine,
+    TemporalPolicy,
+    WorkerPool,
+    admit_batches,
+    serve_stream,
+)
+from repro.serve.queue import QUEUED, ROUTED, SHED
+from repro.serve.streams import arrival_stream, deferrable_stream_multiday
+
+ARCH = "h2o-danube-1.8b"
+N_REGIONS = len(DEFAULT_REGIONS)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def base(cfg):
+    return FleetRouter(cfg)
+
+
+def _placement_fr(cfg, base, caps=None, grid=None):
+    caps = np.full((N_REGIONS, 3), np.inf) if caps is None else caps
+    return FleetRouter(cfg, grid=grid,
+                       policy=PlacementPolicy(OraclePolicy(base.infra), caps))
+
+
+def _temporal_fr(cfg, base, caps=None, grid=None, max_defer_h=12):
+    caps = np.full((N_REGIONS, 3), np.inf) if caps is None else caps
+    return FleetRouter(cfg, grid=grid, policy=TemporalPolicy(
+        OraclePolicy(base.infra), caps, max_defer_h=max_defer_h))
+
+
+class TestArrivalStream:
+    def test_timestamps_sorted_in_range(self):
+        batch, region, t = arrival_stream(50.0, duration_h=24.0,
+                                          n_regions=N_REGIONS, seed=0)
+        assert len(batch) == len(region) == len(t) > 0
+        assert (np.diff(t) >= 0).all()
+        assert t.min() >= 0.0 and t.max() < 24.0
+        assert region.min() >= 0 and region.max() < N_REGIONS
+
+    def test_flash_crowd_spike_raises_local_rate(self):
+        _, _, quiet = arrival_stream(80.0, seed=1, diurnal=False)
+        _, _, spiky = arrival_stream(80.0, seed=1, diurnal=False,
+                                     spike_at_h=12.0, spike_mult=6.0,
+                                     spike_width_h=2.0)
+        in_win = lambda t: ((t >= 11.0) & (t < 13.0)).sum()
+        assert in_win(spiky) > 3 * max(1, in_win(quiet))
+
+    def test_batch_frac_tags_deferrable_slack(self):
+        batch, _, _ = arrival_stream(60.0, seed=2, batch_frac=0.5,
+                                     slack_range_h=(6, 16))
+        slack = np.asarray(batch.slack_hours)
+        tagged = slack > 0
+        assert 0.2 < tagged.mean() < 0.8
+        assert (slack[tagged] >= 6).all() and (slack[tagged] <= 16).all()
+        np.testing.assert_array_equal(
+            np.asarray(batch.latency_budget_s)[tagged], 120.0)
+
+    def test_rejects_nonpositive_rate(self):
+        with pytest.raises(ValueError, match="rate_per_h"):
+            arrival_stream(0.0)
+
+
+class TestRequestQueue:
+    @staticmethod
+    def _stream(n=64, seed=0):
+        return arrival_stream(max(n / 24.0, 4.0), n_regions=N_REGIONS,
+                              seed=seed, batch_frac=0.4)
+
+    def test_push_concatenates_and_conserves(self):
+        b1, r1, t1 = self._stream(seed=0)
+        b2, r2, t2 = self._stream(seed=1)
+        q = RequestQueue.from_stream(b1, r1, t1)
+        q.push(b2, r2, t2)
+        n = len(b1) + len(b2)
+        assert len(q) == n == q.n_queued
+        assert q.n_routed == q.n_shed == 0
+        np.testing.assert_array_equal(
+            np.asarray(q.batch.prompt_tokens),
+            np.concatenate([np.asarray(b1.prompt_tokens),
+                            np.asarray(b2.prompt_tokens)]))
+
+    def test_push_validates_shapes(self):
+        b, r, t = self._stream()
+        with pytest.raises(ValueError, match="region/t_hours"):
+            RequestQueue.from_stream(b, r[:-1], t)
+
+    def test_ready_is_edf_ordered(self):
+        b, r, t = self._stream(seed=3)
+        q = RequestQueue.from_stream(b, r, t)
+        idx = q.ready(before_h=12.0, max_defer_h=12)
+        assert (q.t_hours[idx] < 12.0).all()
+        dl = q.deadline(12)[idx]
+        assert (np.diff(dl) >= 0).all()  # earliest deadline first
+        # ties within a deadline preserve arrival order
+        for d in np.unique(dl):
+            sub = idx[dl == d]
+            assert (np.diff(q.t_hours[sub]) >= 0).all()
+
+    def test_transitions_conserve_and_refuse_doubles(self):
+        b, r, t = self._stream(seed=4)
+        q = RequestQueue.from_stream(b, r, t)
+        n = len(q)
+        idx = q.ready(np.inf, 0)
+        q.mark_routed(idx[:3])
+        q.mark_shed(idx[3:5])
+        assert q.n_routed == 3 and q.n_shed == 2
+        assert q.n_queued + q.n_routed + q.n_shed == n
+        with pytest.raises(ValueError, match="double transition"):
+            q.mark_shed(idx[:1])
+        assert (q.status[idx[:3]] == ROUTED).all()
+        assert (q.status[idx[3:5]] == SHED).all()
+        assert (np.delete(q.status, idx[:5]) == QUEUED).all()
+
+    def test_deadline_clamps_slack_to_horizon(self):
+        b, r, t = self._stream(seed=5)
+        q = RequestQueue.from_stream(b, r, t)
+        dl = q.deadline(4)
+        assert (dl - q.arr_hour <= 4).all()
+        assert (dl >= q.arr_hour).all()
+
+
+class TestBatchFormer:
+    def test_pow2_padding_and_chunking(self):
+        b, r, t = arrival_stream(40.0, n_regions=N_REGIONS, seed=0)
+        q = RequestQueue.from_stream(b, r, t)
+        ready = q.ready(np.inf, 0)
+        former = BatchFormer(max_batch=128, min_pad=16)
+        drafts = former.draft(q, ready, now=0)
+        assert sum(fb.n for fb in drafts) == len(ready)
+        np.testing.assert_array_equal(
+            np.concatenate([fb.idx for fb in drafts]), ready)
+        for fb in drafts:
+            assert fb.pad_to >= fb.n and fb.pad_to & (fb.pad_to - 1) == 0
+            assert fb.n <= 128
+            assert len(fb.batch) == len(fb.region) == len(fb.hour) == \
+                len(fb.slack) == fb.pad_to
+            # pad rows are unroutable dummies
+            assert not np.asarray(fb.batch.available)[fb.n:].any()
+
+    def test_effective_hour_reanchors_to_now(self):
+        b, r, t = arrival_stream(30.0, n_regions=N_REGIONS, seed=1,
+                                 batch_frac=1.0, slack_range_h=(8, 8))
+        q = RequestQueue.from_stream(b, r, t)
+        now = 10
+        ready = q.ready(now + 1, 8)
+        fb = BatchFormer().draft(q, ready, now, 8)[0]
+        k = fb.n
+        assert (fb.hour[:k] >= now).all()
+        np.testing.assert_array_equal(
+            fb.hour[:k], np.maximum(q.arr_hour[fb.idx], now))
+        # slack re-anchored: deadline preserved, never negative
+        np.testing.assert_array_equal(
+            fb.slack[:k],
+            np.maximum(q.deadline(8)[fb.idx] - fb.hour[:k], 0))
+
+    def test_kv_aware_sizing(self, cfg):
+        b, r, t = arrival_stream(40.0, n_regions=N_REGIONS, seed=2)
+        q = RequestQueue.from_stream(b, r, t)
+        ready = q.ready(np.inf, 0)
+        engine = ServeEngine(cfg, params=None, max_seq=512, kv_slots=8)
+        drafts = BatchFormer(max_batch=64, engine=engine).draft(q, ready, 0)
+        assert sum(fb.n for fb in drafts) == len(ready)
+        toks = (np.asarray(q.batch.prompt_tokens)
+                + np.asarray(q.batch.max_new_tokens))
+        for fb in drafts:
+            assert fb.n <= 8  # never more concurrent rows than KV slots
+            seq = np.minimum(toks[fb.idx], engine.max_seq)
+            assert seq.sum() <= engine.kv_token_budget
+
+    def test_rejects_bad_max_batch(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            BatchFormer(max_batch=0)
+
+
+class TestWorkerPool:
+    def test_launch_delay_then_active(self):
+        pool = WorkerPool(2, slots_per_worker=10.0, launch_delay_steps=2)
+        pool.launch(0, 1, n=3)
+        assert pool.launching[0, 1] == 3 and pool.active.sum() == 0
+        assert pool.cap_matrix()[0, 1] == 0.0  # launching slots don't count
+        pool.tick()
+        assert pool.active.sum() == 0
+        pool.tick()
+        assert pool.active[0, 1] == 3 and not pool._pending
+        assert pool.cap_matrix()[0, 1] == 30.0
+
+    def test_drain_removes_slots_immediately(self):
+        pool = WorkerPool(2, slots_per_worker=10.0, launch_delay_steps=0)
+        pool.launch(1, 2, n=4)
+        pool.tick()
+        assert pool.cap_matrix()[1, 2] == 40.0
+        assert pool.drain(1, 2, n=2) == 2
+        assert pool.cap_matrix()[1, 2] == 20.0  # draining accepts no work
+        assert pool.draining[1, 2] == 2
+        assert pool.terminate_drained() == 2
+        assert pool.terminated[1, 2] == 2 and pool.draining.sum() == 0
+        # draining more than active drains what's there
+        assert pool.drain(1, 2, n=99) == 2
+        assert pool.cap_matrix()[1, 2] == 0.0
+
+    def test_mobile_tier_unbounded_by_default(self):
+        pool = WorkerPool(3, slots_per_worker=5.0)
+        assert np.isinf(pool.cap_matrix()[:, 0]).all()
+        bounded = WorkerPool(3, slots_per_worker=5.0,
+                             mobile_unbounded=False)
+        assert (bounded.cap_matrix() == 0.0).all()
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="slots_per_worker"):
+            WorkerPool(2, slots_per_worker=0.0)
+        pool = WorkerPool(2)
+        with pytest.raises(ValueError, match="at least one"):
+            pool.launch(0, 1, n=0)
+
+
+def _assert_conserved(result, n, steps_expected=None):
+    """Every request settles exactly once; per-step ledger balances."""
+    assert len(result.target) == n
+    assert int(result.shed.sum()) + int((~result.shed).sum()) == n
+    assert (result.step >= 0).all()  # everything committed by some step
+    routed = shed = 0
+    for s in result.steps:
+        assert s.drafted == s.routed + s.shed + s.held
+        routed += s.routed
+        shed += s.shed
+        # the queue is the ledger: queued_after + settled-so-far == n
+        assert s.queued_after + routed + shed == n
+    assert routed + shed == n
+    assert routed == int((~result.shed).sum())
+    assert shed == result.shed_count
+
+
+class TestServeConservation:
+    """ISSUE-7 acceptance: enqueued == routed + shed + still-queued at
+    every step — pinned seeds always, the hypothesis property when the
+    plugin is installed."""
+
+    @staticmethod
+    def _serve(cfg, base, seed, rate, step_h, capped):
+        batch, region, t = arrival_stream(
+            rate, n_regions=N_REGIONS, seed=seed, batch_frac=0.4,
+            spike_at_h=12.0, spike_mult=3.0)
+        caps = None
+        if capped:
+            caps = np.full((N_REGIONS, 3), np.inf)
+            caps[:, 1] = caps[:, 2] = max(4.0, len(batch) / (N_REGIONS * 8))
+        fr = _temporal_fr(cfg, base, caps=caps, max_defer_h=8)
+        res = serve_stream(fr, batch, region, t, step_h=step_h)
+        _assert_conserved(res, len(batch))
+        return batch, region, t, res
+
+    @pytest.mark.parametrize("seed,rate,step_h,capped",
+                             [(0, 40.0, 1, False), (1, 60.0, 2, True),
+                              (2, 25.0, 4, True)])
+    def test_conservation_pinned(self, cfg, base, seed, rate, step_h,
+                                 capped):
+        batch, _, t, res = self._serve(cfg, base, seed, rate, step_h,
+                                       capped)
+        # commitments respect time: nothing executes before it arrives or
+        # after its clamped deadline, and never past the horizon
+        arr = np.floor(t).astype(np.int32)
+        live = ~res.shed
+        assert (res.exec_hour[live] >= arr[live]).all()
+        dl = arr + np.minimum(batch.slack_h, 8)
+        assert (res.exec_hour[live] <= dl[live]).all()
+        assert (res.exec_hour < 24).all()
+        np.testing.assert_array_equal(res.defer_hours[live],
+                                      res.exec_hour[live] - arr[live])
+        assert res.total_carbon_g >= res.routed_carbon_g >= 0.0
+
+    @hypothesis.settings(max_examples=3, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 20),
+                      rate=st.floats(10.0, 80.0),
+                      step_h=st.sampled_from([1, 2, 4]),
+                      capped=st.booleans())
+    def test_conservation_property(self, cfg, base, seed, rate, step_h,
+                                   capped):
+        self._serve(cfg, base, seed, rate, step_h, capped)
+
+    def test_placement_policy_loop(self, cfg, base):
+        """Non-temporal policies serve too: everything commits on decision
+        (no deferral state), conservation still holds."""
+        batch, region, t = arrival_stream(40.0, n_regions=N_REGIONS,
+                                          seed=7)
+        fr = _placement_fr(cfg, base)
+        res = serve_stream(fr, batch, region, t, step_h=2)
+        _assert_conserved(res, len(batch))
+        assert res.shed_count == 0  # uncapped: nothing sheds
+        np.testing.assert_array_equal(res.exec_hour,
+                                      np.floor(t).astype(np.int32))
+
+    def test_empty_stream(self, cfg, base):
+        fr = _placement_fr(cfg, base)
+        res = serve_stream(fr, RequestBatch.from_requests([]),
+                           np.zeros(0, np.int64), np.zeros(0))
+        assert len(res.target) == 0 and res.total_carbon_g == 0.0
+
+    def test_rejects_out_of_horizon_arrivals(self, cfg, base):
+        batch, region, t = arrival_stream(20.0, n_regions=N_REGIONS,
+                                          seed=0)
+        fr = _placement_fr(cfg, base)
+        with pytest.raises(ValueError, match="serve loop owns the time"):
+            serve_stream(fr, batch, region, t + 24.0)
+
+
+class _DrainAt(WorkerPool):
+    """Pool that drains EVERY active worker at a given serve step —
+    models an operator pulling the fleet mid-stream."""
+
+    def __init__(self, *args, drain_step, **kw):
+        super().__init__(*args, **kw)
+        self._t = 0
+        self._drain_step = drain_step
+
+    def tick(self):
+        super().tick()
+        self._t += 1
+        if self._t == self._drain_step:
+            for r in range(self.n_regions):
+                for tier in range(3):
+                    if self.active[r, tier]:
+                        self.drain(r, tier, n=int(self.active[r, tier]))
+
+
+class TestWorkerPoolAdmission:
+    """ISSUE-7 acceptance: no batch exceeds worker slots; drained workers
+    accept no new work."""
+
+    @staticmethod
+    def _dc_only(batch):
+        # close the mobile tier so the pool's DC slots are the only way in
+        avail = np.asarray(batch.available).copy()
+        avail[:, 0] = False
+        return dataclasses.replace(batch, available=avail)
+
+    @staticmethod
+    def _unit_caps():
+        # the queue convention: unit policy caps, the pool's live slot
+        # matrix IS the admission limit (caps * cap_scale)
+        return np.ones((N_REGIONS, 3))
+
+    def test_commits_never_exceed_live_slots(self, cfg, base):
+        batch, region, t = arrival_stream(50.0, n_regions=N_REGIONS,
+                                          seed=0)
+        batch = self._dc_only(batch)
+        pool = WorkerPool(N_REGIONS, slots_per_worker=3.0,
+                          launch_delay_steps=0)
+        for r in range(N_REGIONS):
+            pool.launch(r, 1, n=2)
+            pool.launch(r, 2, n=1)
+        slots = np.zeros((N_REGIONS, 3))
+        slots[:, 1], slots[:, 2] = 6.0, 3.0
+        fr = _placement_fr(cfg, base, caps=self._unit_caps())
+        res = serve_stream(fr, batch, region, t, pool=pool)
+        _assert_conserved(res, len(batch))
+        assert res.shed_count > 0  # the pool is binding on this stream
+        live = ~res.shed
+        # per committed (hour, region, tier) cell: count <= live slots
+        for h in np.unique(res.exec_hour[live]):
+            sel = live & (res.exec_hour == h)
+            counts = np.zeros((N_REGIONS, 3))
+            np.add.at(counts, (res.exec_region[sel], res.target[sel]), 1)
+            assert (counts <= slots + 1e-9).all(), (h, counts)
+
+    def test_drained_workers_accept_no_new_work(self, cfg, base):
+        batch, region, t = arrival_stream(30.0, n_regions=N_REGIONS,
+                                          seed=1)
+        batch = self._dc_only(batch)
+        drain_step = 12
+        pool = _DrainAt(N_REGIONS, slots_per_worker=1e6,
+                        launch_delay_steps=0, drain_step=drain_step)
+        for r in range(N_REGIONS):
+            for tier in (1, 2):
+                pool.launch(r, tier, n=1)
+        fr = _placement_fr(cfg, base, caps=self._unit_caps())
+        res = serve_stream(fr, batch, region, t, pool=pool)
+        _assert_conserved(res, len(batch))
+        early = res.step < drain_step - 1
+        assert (~res.shed[early]).any()  # plenty of slots before the drain
+        # from the drain step on the pool is empty: every commit sheds
+        assert res.shed[~early].all()
+        assert res.shed_count == int((~early).sum())
+
+    def test_launch_delay_holds_admission_back(self, cfg, base):
+        """Workers launched at t=0 with a delay: the first steps shed (or
+        retry), commits only appear once the slots come online."""
+        batch, region, t = arrival_stream(20.0, n_regions=N_REGIONS,
+                                          seed=2, diurnal=False)
+        batch = self._dc_only(batch)
+        delay = 6
+        pool = WorkerPool(N_REGIONS, slots_per_worker=1e6,
+                          launch_delay_steps=delay)
+        for r in range(N_REGIONS):
+            pool.launch(r, 1, n=1)
+            pool.launch(r, 2, n=1)
+        fr = _placement_fr(cfg, base, caps=self._unit_caps())
+        res = serve_stream(fr, batch, region, t, pool=pool)
+        _assert_conserved(res, len(batch))
+        live = ~res.shed
+        assert live.any()
+        assert (res.step[live] >= delay - 1).all()
+
+
+class TestRoutingSeamParity:
+    """The queue drives ``_route_arrays`` through cap_scale/used0 — a unit
+    scale and a zero ledger must be inert, (R,) and (R, 3) equivalent."""
+
+    @staticmethod
+    def _route(fr, batch, region, t_hours, **kw):
+        hour = np.floor(t_hours).astype(np.int32)
+        res, state = fr._route_arrays(batch, region.astype(np.int32), hour,
+                                      **kw)
+        return np.asarray(res.target), np.asarray(res.carbon_g)
+
+    @pytest.mark.parametrize("temporal", [False, True])
+    def test_unit_scale_and_zero_ledger_are_inert(self, cfg, base,
+                                                  temporal):
+        batch, region, t = deferrable_stream_multiday(600, N_REGIONS,
+                                                      n_days=1, seed=0)
+        caps = np.full((N_REGIONS, 3), 30.0)
+        fr = (_temporal_fr if temporal else _placement_fr)(cfg, base,
+                                                           caps=caps)
+        ref = self._route(fr, batch, region, t)
+        W = fr.policy.n_windows or fr._horizon_h
+        variants = [
+            dict(cap_scale=jnp.ones(N_REGIONS)),
+            dict(cap_scale=jnp.ones((N_REGIONS, 3))),
+            dict(used0=jnp.zeros(W * N_REGIONS * 3)),
+            dict(cap_scale=jnp.ones((N_REGIONS, 3)),
+                 used0=jnp.zeros(W * N_REGIONS * 3)),
+        ]
+        for kw in variants:
+            tgt, g = self._route(fr, batch, region, t, **kw)
+            np.testing.assert_array_equal(tgt, ref[0])
+            np.testing.assert_array_equal(g, ref[1])
+
+    def test_binding_scale_sheds(self, cfg, base):
+        batch, region, t = deferrable_stream_multiday(600, N_REGIONS,
+                                                      n_days=1, seed=0)
+        caps = np.full((N_REGIONS, 3), 30.0)
+        fr = _temporal_fr(cfg, base, caps=caps)
+        _, state = fr._route_arrays(
+            batch, region.astype(np.int32),
+            np.floor(t).astype(np.int32),
+            cap_scale=jnp.zeros((N_REGIONS, 3)).at[:, 0].set(1.0))
+        assert np.asarray(state.shed).sum() > 0
+
+    def test_seeded_ledger_reduces_admission(self, cfg, base):
+        """A pre-seeded used0 ledger consumes capacity exactly like
+        in-stream arrivals: fewer slots remain, more rows shed."""
+        batch, region, t = deferrable_stream_multiday(600, N_REGIONS,
+                                                      n_days=1, seed=1)
+        caps = np.full((N_REGIONS, 3), 8.0)
+        fr = _temporal_fr(cfg, base, caps=caps)
+        W = fr.policy.n_windows or fr._horizon_h
+        _, s0 = fr._route_arrays(batch, region.astype(np.int32),
+                                 np.floor(t).astype(np.int32))
+        _, s1 = fr._route_arrays(batch, region.astype(np.int32),
+                                 np.floor(t).astype(np.int32),
+                                 used0=jnp.full(W * N_REGIONS * 3, 6.0))
+        assert int(np.asarray(s1.shed).sum()) > \
+            int(np.asarray(s0.shed).sum())
+
+
+class TestAdmitBatches:
+    def test_partition_matches_commitments(self, cfg, base):
+        batch, region, t = arrival_stream(40.0, n_regions=N_REGIONS,
+                                          seed=3)
+        fr = _placement_fr(cfg, base)
+        res = serve_stream(fr, batch, region, t, step_h=2)
+        engine = ServeEngine(cfg, params=None, tier=1)
+        windows = admit_batches(res, engine)
+        got = np.concatenate([w for w in windows]) if windows else \
+            np.zeros(0, np.int64)
+        want = np.nonzero((res.target == 1) & ~res.shed)[0]
+        np.testing.assert_array_equal(np.sort(got), want)
+        # each window's rows committed in the same serve step
+        for w in windows:
+            assert len(np.unique(res.step[w])) <= 1
+
+    def test_admit_windows_delegates_to_queue(self, cfg, base):
+        batch, region, t = arrival_stream(40.0, n_regions=N_REGIONS,
+                                          seed=3)
+        fr = _placement_fr(cfg, base)
+        res = serve_stream(fr, batch, region, t, step_h=2)
+        engine = ServeEngine(cfg, params=None, tier=1)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # delegation must NOT warn
+            via_shim = fr.admit_windows(None, None, engine, queue=res)
+        direct = admit_batches(res, engine)
+        assert len(via_shim) == len(direct)
+        for a, b in zip(via_shim, direct):
+            np.testing.assert_array_equal(a, b)
+
+    def test_legacy_bucketed_path_warns_once(self, cfg, base):
+        batch, region, t = arrival_stream(30.0, n_regions=N_REGIONS,
+                                          seed=4)
+        fr = _placement_fr(cfg, base)
+        one = fr.route_stream(batch, region, t)
+        engine = ServeEngine(cfg, params=None, tier=1)
+        router_mod._admit_windows_warned = False
+        with pytest.warns(DeprecationWarning, match="admit_windows"):
+            legacy = fr.admit_windows(one, t, engine)
+        # warn-once: the second call is silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            legacy2 = fr.admit_windows(one, t, engine)
+        assert len(legacy) == len(legacy2) == 24
+        for a, b in zip(legacy, legacy2):
+            np.testing.assert_array_equal(a, b)
+        # bit-for-bit the historical behaviour
+        hour = np.floor(t).astype(np.int64) % 24
+        mask = np.asarray(engine.admit(one.target))
+        for h in range(24):
+            np.testing.assert_array_equal(
+                legacy[h], np.nonzero(mask & (hour == h))[0])
