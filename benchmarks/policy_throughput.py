@@ -62,12 +62,27 @@ oracle, reporting req/s + routed gCO2 + the fraction of the
 static-vs-oracle gap the refit closes. ASSERTS refit routes no dirtier
 than static — the `--smoke` CI gate.
 
+A seventh section is the ISSUE-8 device-scaling pin. The capped
+cross-region placement stream (the reconciliation-heavy admission mode)
+runs through the ``shard_map`` sharded routing path on 1/2/4/.../D-device
+meshes (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` CPU fakes
+in CI) against the single-device program. Decisions are bit-identical at
+every device count — hard-asserted here: routed gCO2 through the sharded
+path must be EXACT across counts and match the single-device program to
+f32 round-off — and the per-count speedup is reported; the >=3x-at-8
+acceptance asserts only where it can hold (the full 10M stream on >= 8
+devices with >= 8 physical cores). ``enable_compile_cache`` is wired
+first, so CI's cached cache directory turns every rerun into a warm
+start.
+
 Run:  PYTHONPATH=src python -m benchmarks.policy_throughput [--n 1000000]
+      [--devices 8] [--profile-dir /tmp/trace]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -93,6 +108,8 @@ from repro.serve import (
     PlacementPolicy,
     TemporalPolicy,
     WorkerPool,
+    data_mesh,
+    enable_compile_cache,
     serve_stream,
 )
 from repro.serve.streams import (
@@ -114,17 +131,26 @@ def fit_dataset():
     return build_dataset(ALL_PAPER_WORKLOADS, res, table).split()[0]
 
 
-def _time_stream(fr, batch, region, t_hours, reps):
-    res = fr.route_stream(batch, region, t_hours)  # compile + warm
+def _time_stream(fr, batch, region, t_hours, reps, mesh=None):
+    """(mean_s, best_s, result) over ``reps`` timed calls after a warm-up.
+
+    Best-of-reps is reported alongside the mean everywhere: on shared CI
+    runners the mean soaks up scheduler noise while the best approximates
+    the machine's actual capability — a regression that moves BOTH is
+    real."""
+    res = fr.route_stream(batch, region, t_hours, mesh=mesh)  # compile+warm
     jax.block_until_ready(res.target)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
-        res = fr.route_stream(batch, region, t_hours)
-    jax.block_until_ready(res.target)
-    return (time.perf_counter() - t0) / reps, res
+        t0 = time.perf_counter()
+        res = fr.route_stream(batch, region, t_hours, mesh=mesh)
+        jax.block_until_ready(res.target)
+        times.append(time.perf_counter() - t0)
+    return sum(times) / reps, min(times), res
 
 
-def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
+def run(n: int = 1_000_000, reps: int = 3,
+        devices: int | None = None) -> list[BenchRow]:
     cfg = get_config(ARCH)
     base = FleetRouter(cfg)
     infra = base.infra
@@ -157,7 +183,7 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
     capped_us = {}
     for name, policy in policies:
         fr = base if policy is None else FleetRouter(cfg, policy=policy)
-        dt, res = _time_stream(fr, batch, region, t_hours, reps)
+        dt, dt_best, res = _time_stream(fr, batch, region, t_hours, reps)
         us = dt / n * 1e6
         if baseline_g is None:
             baseline_g = float(res.latency_opt_carbon_g)
@@ -169,7 +195,8 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
                      f"{capped_us['capped_oracle_scan'] / us:.2f}x")
         rows.append(BenchRow(
             f"policy_{name}", us,
-            f"req/s={1e6 / us:.0f} carbon_g={float(res.total_carbon_g):.4g} "
+            f"req/s={1e6 / us:.0f} best_req_s={n / dt_best:.0f} "
+            f"carbon_g={float(res.total_carbon_g):.4g} "
             f"saved_vs_latency_g={baseline_g - float(res.total_carbon_g):.4g} "
             f"qos_rate={float(res.qos_violation_rate):.4f} "
             f"shed={int(res.shed_count)}{extra}"))
@@ -179,6 +206,89 @@ def run(n: int = 1_000_000, reps: int = 3) -> list[BenchRow]:
     rows += multiday_rows(cfg, infra, train, n=n, reps=reps)
     rows += forecast_rows(cfg, infra, n=min(n, 50_000), reps=reps)
     rows += queue_rows(cfg, infra, train, n=n, reps=reps)
+    rows += device_rows(cfg, infra, n=n, reps=reps, devices=devices)
+    return rows
+
+
+def device_rows(cfg, infra, n: int, reps: int = 1,
+                devices: int | None = None) -> list[BenchRow]:
+    """ISSUE-8 device-scaling pin: the capped cross-region placement
+    stream (the reconciliation-heavy admission mode) through the
+    ``shard_map`` sharded routing path on 1/2/4/.../D-device meshes vs the
+    single-device program.
+
+    Hard parity gates at EVERY count: decisions bit-identical, routed
+    gCO2 EXACT across device counts (the sharded path aggregates
+    host-side from bit-identical per-row arrays) and equal to the
+    single-device program to f32 round-off. The >=3x-at-8-devices
+    acceptance asserts only where it can hold: the full 10M-request
+    stream on >= 8 devices backed by >= 8 physical cores (fake CPU
+    devices share cores, so speedup on a small host measures nothing).
+    """
+    enable_compile_cache()
+    avail = len(jax.devices())
+    want = avail if devices is None else devices
+    if want > avail:
+        return [BenchRow(
+            "devices_unavailable", 0.0,
+            f"requested {want} devices but only {avail} present — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={want}")]
+    d_list = [d for d in (1, 2, 4, 8, 16, 32, 64) if d <= want]
+
+    base = FleetRouter(cfg)
+    n_regions = len(base.regions)
+    batch, region, t_hours = multi_region_stream(n, n_regions)
+    caps = np.full((n_regions, 3), np.inf)
+    per_cell = max(1.0, 0.4 * n / (n_regions * 24))
+    caps[:, 1] = caps[:, 2] = per_cell  # binding: reconciliation is live
+    xgrid = CarbonGrid.fully_connected(base.regions, latency_penalty=1.05)
+    fr = FleetRouter(cfg, grid=xgrid,
+                     policy=PlacementPolicy(OraclePolicy(infra), caps))
+
+    dt, dt_best, ref = _time_stream(fr, batch, region, t_hours, reps)
+    rows = [BenchRow(
+        "devices_single_program", dt / n * 1e6,
+        f"req/s={n / dt:.0f} best_req_s={n / dt_best:.0f} "
+        f"routed_g={float(ref.routed_carbon_g):.6g} "
+        f"shed={int(ref.shed_count)}")]
+
+    tgt1 = routed1 = us1 = None
+    speedup = 1.0
+    for d in d_list:
+        mesh = data_mesh(d)
+        dt, dt_best, res = _time_stream(fr, batch, region, t_hours, reps,
+                                        mesh=mesh)
+        us = dt / n * 1e6
+        routed = float(res.routed_carbon_g)
+        tgt = np.asarray(res.target)
+        if tgt1 is None:
+            tgt1, routed1, us1 = tgt, routed, us
+        # the headline invariant: sharding is not allowed to change a
+        # single decision or move the routed total by one bit
+        assert np.array_equal(tgt, tgt1), \
+            f"sharded decisions diverged at {d} devices"
+        assert routed == routed1, (
+            f"sharded routed gCO2 not bit-stable across device counts: "
+            f"{routed!r} at {d} devices vs {routed1!r} at {d_list[0]}")
+        np.testing.assert_allclose(
+            routed, float(ref.routed_carbon_g), rtol=1e-5,
+            err_msg=f"sharded routed gCO2 != single-device at {d} devices")
+        assert np.array_equal(tgt, np.asarray(ref.target)), \
+            f"sharded decisions != single-device program at {d} devices"
+        speedup = us1 / us
+        rows.append(BenchRow(
+            f"devices_shard_{d}", us,
+            f"req/s={n / dt:.0f} best_req_s={n / dt_best:.0f} "
+            f"routed_g={routed:.6g} shed={int(res.shed_count)} "
+            f"speedup_vs_1dev={speedup:.2f}x"))
+
+    # the ISSUE-8 acceptance: >=3x at 8 devices on the full 10M stream —
+    # gated on real parallel hardware (fake devices time-slicing one core
+    # can only show parity, not speedup)
+    if n >= 10_000_000 and max(d_list) >= 8 and (os.cpu_count() or 1) >= 8:
+        assert speedup >= 3.0, (
+            f"sharded routing at {max(d_list)} devices reached only "
+            f"{speedup:.2f}x over 1 device (>=3x required at n={n})")
     return rows
 
 
@@ -222,7 +332,7 @@ def placement_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
     rows = []
     sweep_us = {}
     for name, fr in configs:
-        dt, res = _time_stream(fr, batch, region, t_hours, reps)
+        dt, dt_best, res = _time_stream(fr, batch, region, t_hours, reps)
         us = dt / n * 1e6
         if name.endswith("sweep") or name.endswith("sweep_uncapped"):
             sweep_us[name.replace("sweep", "einsum")] = us
@@ -231,7 +341,8 @@ def placement_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
             extra = f" speedup_vs_sweep={sweep_us[name] / us:.2f}x"
         rows.append(BenchRow(
             name, us,
-            f"req/s={1e6 / us:.0f} carbon_g={float(res.total_carbon_g):.4g} "
+            f"req/s={1e6 / us:.0f} best_req_s={n / dt_best:.0f} "
+            f"carbon_g={float(res.total_carbon_g):.4g} "
             f"routed_g={float(res.routed_carbon_g):.4g} "
             f"shed={int(res.shed_count)} "
             f"spilled={int(res.spilled_count)}{extra}"))
@@ -264,13 +375,13 @@ def temporal_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
     rows = []
     immediate_g = None
     for name, fr in configs:
-        dt, res = _time_stream(fr, batch, region, t_hours, reps)
+        dt, dt_best, res = _time_stream(fr, batch, region, t_hours, reps)
         us = dt / n * 1e6
         if immediate_g is None:
             immediate_g = float(res.routed_carbon_g)
         rows.append(BenchRow(
             name, us,
-            f"req/s={1e6 / us:.0f} "
+            f"req/s={1e6 / us:.0f} best_req_s={n / dt_best:.0f} "
             f"routed_g={float(res.routed_carbon_g):.4g} "
             f"saved_vs_immediate_g="
             f"{immediate_g - float(res.routed_carbon_g):.4g} "
@@ -321,13 +432,13 @@ def multiday_rows(cfg, infra, train, n: int, reps: int = 1
     for name, inner in place:
         fr = FleetRouter(cfg, grid=grid2,
                          policy=PlacementPolicy(inner, free))
-        dt, res = _time_stream(fr, batch, region, t_hours, reps)
+        dt, dt_best, res = _time_stream(fr, batch, region, t_hours, reps)
         us = dt / n * 1e6
         if oracle_us is None:
             oracle_us = us
         rows.append(BenchRow(
             name, us,
-            f"req/s={1e6 / us:.0f} "
+            f"req/s={1e6 / us:.0f} best_req_s={n / dt_best:.0f} "
             f"routed_g={float(res.routed_carbon_g):.4g} "
             f"spilled={int(res.spilled_count)} "
             f"vs_oracle={us / oracle_us:.2f}x"))
@@ -345,13 +456,13 @@ def multiday_rows(cfg, infra, train, n: int, reps: int = 1
     for name, grid, inner in temporal:
         fr = FleetRouter(cfg, grid=grid,
                          policy=TemporalPolicy(inner, caps, max_defer_h=16))
-        dt, res = _time_stream(fr, bt, rt_, tt, reps)
+        dt, dt_best, res = _time_stream(fr, bt, rt_, tt, reps)
         us = dt / n_t * 1e6
         if oracle_us is None:
             oracle_us, oracle_g = us, float(res.routed_carbon_g)
         rows.append(BenchRow(
             name, us,
-            f"req/s={1e6 / us:.0f} "
+            f"req/s={1e6 / us:.0f} best_req_s={n_t / dt_best:.0f} "
             f"routed_g={float(res.routed_carbon_g):.4g} "
             f"saved_vs_oracle_g={oracle_g - float(res.routed_carbon_g):.4g} "
             f"shed={int(res.shed_count)} "
@@ -380,17 +491,20 @@ def forecast_rows(cfg, infra, n: int, reps: int = 1) -> list[BenchRow]:
         OraclePolicy(infra), free, max_defer_h=12, risk_lambda=1.0))
 
     rows = []
-    dt, res_im = _time_stream(immediate, batch, region, t_hours, reps)
+    dt, dt_best, res_im = _time_stream(immediate, batch, region, t_hours,
+                                       reps)
     g_im = float(res_im.routed_carbon_g)
     rows.append(BenchRow(
         "forecast_immediate", dt / n * 1e6,
-        f"req/s={n / dt:.0f} routed_g={g_im:.4g} sigma_h=0.03"))
+        f"req/s={n / dt:.0f} best_req_s={n / dt_best:.0f} "
+        f"routed_g={g_im:.4g} sigma_h=0.03"))
 
-    dt, res_bl = _time_stream(blind, batch, region, t_hours, reps)
+    dt, dt_best, res_bl = _time_stream(blind, batch, region, t_hours, reps)
     g_bl = float(res_bl.routed_carbon_g)
     rows.append(BenchRow(
         "forecast_oneshot_blind", dt / n * 1e6,
-        f"req/s={n / dt:.0f} routed_g={g_bl:.4g} "
+        f"req/s={n / dt:.0f} best_req_s={n / dt_best:.0f} "
+        f"routed_g={g_bl:.4g} "
         f"saved_vs_immediate_g={g_im - g_bl:.4g} "
         f"deferred={int(res_bl.deferred_count)}"))
 
@@ -509,9 +623,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=1_000_000)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device-scaling section mesh size (default: all "
+                         "local devices; use XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N for "
+                         "fake CPU devices)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="write a jax.profiler trace of the whole run "
+                         "here (view with TensorBoard / Perfetto)")
     args = ap.parse_args()
+    if args.profile_dir:
+        with jax.profiler.trace(args.profile_dir):
+            rows = run(args.n, args.reps, devices=args.devices)
+    else:
+        rows = run(args.n, args.reps, devices=args.devices)
     print("name,us_per_call,derived")
-    for row in run(args.n, args.reps):
+    for row in rows:
         print(row.csv())
 
 

@@ -1,7 +1,9 @@
 """Serving: batched engine, GreenScale routers, pluggable routing policies,
 the geo-temporal placement layer, the temporal deferral engine, the rolling
-forecast-native re-planner, and the continuous-batching request queue with
-online policy refit."""
+forecast-native re-planner, the continuous-batching request queue with
+online policy refit, and the device-sharded routing hot path
+(``repro.serve.distributed``: attach a mesh via ``FleetRouter(mesh=...)``
+and every entry point shards bit-identically)."""
 
 from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
 from repro.serve.engine import ServeEngine
@@ -26,6 +28,7 @@ from repro.serve.queue import (
 from repro.serve.placement import (
     PlacementPolicy,
     PlacementState,
+    device_prefix_ranks,
     windowed_segment_ranks,
 )
 from repro.serve.temporal import TemporalPolicy, TemporalState
@@ -44,4 +47,10 @@ from repro.serve.router import (
     Request,
     RequestBatch,
     RouteDecision,
+)
+from repro.serve.distributed import (
+    DATA_AXIS,
+    data_mesh,
+    enable_compile_cache,
+    route_arrays_sharded,
 )

@@ -126,6 +126,40 @@ def windowed_segment_ranks(choice: jax.Array, active: jax.Array,
     return rank, totals
 
 
+def device_prefix_ranks(rank: jax.Array, totals: jax.Array, cell: jax.Array,
+                        axis_name: str | None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Lift one round's local ``(rank, totals)`` to their GLOBAL values when
+    the sorted stream is sharded contiguously over a mesh axis.
+
+    Contiguous sharding of the segment-sorted stream means every row on an
+    earlier device (by ``lax.axis_index``) precedes every local row in
+    stream order, so a row's global within-cell rank is its local rank plus
+    the earlier devices' active count for its cell: one ``all_gather`` of
+    the per-cell totals to (n_devices, n_cells), an exclusive cumsum over
+    the device axis, and a per-row gather. Global per-cell totals are the
+    device sum of the same gather (== psum). All int32 counting arithmetic
+    — the reconciliation is exact, which is what makes sharded admission
+    bit-identical to the single-device program. ``axis_name=None`` is the
+    single-device identity."""
+    if axis_name is None:
+        return rank, totals
+    all_totals = jax.lax.all_gather(totals, axis_name)  # (D, n_cells)
+    prior = (jnp.cumsum(all_totals, axis=0)[jax.lax.axis_index(axis_name)]
+             - totals)  # exclusive prefix over earlier devices
+    return rank + prior[cell], all_totals.sum(axis=0)
+
+
+def _global_any(pred: jax.Array, axis_name: str | None) -> jax.Array:
+    """``pred.any()`` across the mesh axis (identity when unsharded) — the
+    sharded admission loops must keep spinning while ANY device still has
+    an open-celled contender, or devices would exit the collective loop at
+    different trip counts and deadlock."""
+    if axis_name is None:
+        return pred
+    return jax.lax.psum(pred.astype(jnp.int32), axis_name) > 0
+
+
 @dataclasses.dataclass
 class PlacementPolicy(RoutingPolicy):
     """Wrap any policy with joint (region, tier) placement under per-pair
@@ -435,7 +469,8 @@ class PlacementPolicy(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None, fc_table=None, cap_scale=None, used0=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None,
+               axis_name=None):
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:
@@ -456,13 +491,13 @@ class PlacementPolicy(RoutingPolicy):
             s = scores_with_reuse(self.inner, w, env, avail, hour,
                                   outputs)  # (N, 3)
             return self._decide_diag(s, win, home, order, inv, state,
-                                     caps_rt, used0)
+                                     caps_rt, used0, axis_name)
         if self._use_factors(factors):
             s = self._cross_scores_factorized(
                 factors, w, env, avail, home, hr,
                 fc_table=fc_table).reshape(n, n_pairs)
             return self._decide_cross(s, win, home, order, inv, state,
-                                      caps_rt, used0)
+                                      caps_rt, used0, axis_name)
         # non-factorizable inner policy: the verbatim PR-3 program (one
         # Table-1 sweep per candidate region, fixed-round admission). The
         # sweep has no rtt_s seam, so a WAN-hop grid must not silently
@@ -477,15 +512,19 @@ class PlacementPolicy(RoutingPolicy):
                 "inner policy an infra (LearnedPolicy.fit(..., infra=))")
         s = self.pair_scores(w, env, avail, home, hr).reshape(n, n_pairs)
         return self._decide_cross_legacy(s, win, home, order, inv, state,
-                                         caps_rt, used0)
+                                         caps_rt, used0, axis_name)
 
     def _decide_diag(self, s, win, home, order, inv, state,
-                     caps_rt=None, used0=None):
+                     caps_rt=None, used0=None, axis_name=None):
         """Tier-only admission: the PR-2/PR-3 segment-rank program,
         unchanged — 3 unrolled spill rounds marching each request down its
         preference list, bit-for-bit CapacityLimiter parity. ``caps_rt``
         (None = the configured caps) and ``used0`` (None = fresh cells) are
-        the runtime-capacity seams of the serving loop."""
+        the runtime-capacity seams of the serving loop. ``axis_name`` names
+        the mesh axis the sorted stream is sharded over (None = unsharded):
+        each round's local ranks/totals are lifted to global values by
+        ``device_prefix_ranks`` before the capacity comparison, so the
+        replicated ``used`` ledger advances identically on every device."""
         n = s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if caps_rt is None:
@@ -521,6 +560,7 @@ class PlacementPolicy(RoutingPolicy):
             cell = seg_s * width + choice  # == win * n_pairs + col
             rank, totals = windowed_segment_ranks(
                 choice, active, cell, starts, ends, width)
+            rank, totals = device_prefix_ranks(rank, totals, cell, axis_name)
             # 1-based rank vs <= cap, exactly CapacityLimiter's comparison —
             # fractional caps admit floor(cap) either way
             fits = active & (used[cell] + rank + 1.0 <= caps_flat[col])
@@ -547,11 +587,16 @@ class PlacementPolicy(RoutingPolicy):
 
         shed = shed_s[inv]
         targets = (exec_pair % N_TARGETS).astype(jnp.int32)[inv]
+        # ``used`` advanced by GLOBAL totals, so counts are already the
+        # fleet-wide ledger (replicated when sharded); shed is per-row and
+        # the shed_pair histogram needs the cross-device sum
         counts = (used - used_init).reshape(
             self.n_windows, n_regions, N_TARGETS).sum(axis=0)
         shed_pair = (jax.nn.one_hot(first_col_s, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(
             n_regions, N_TARGETS)
+        if axis_name is not None:
+            shed_pair = jax.lax.psum(shed_pair, axis_name)
         return targets, PlacementState(
             counts=state.counts + counts.astype(jnp.int32),
             shed=shed,
@@ -561,7 +606,7 @@ class PlacementPolicy(RoutingPolicy):
             shed_pair=state.shed_pair + shed_pair)
 
     def _decide_cross(self, s, win, home, order, inv, state,
-                      caps_rt=None, used0=None):
+                      caps_rt=None, used0=None, axis_name=None):
         """Cross-region admission: skip-full best-open attempts under a
         ``lax.while_loop``. Each round every unplaced request targets its
         best candidate whose cell still has budget (a masked argmin — no
@@ -599,18 +644,23 @@ class PlacementPolicy(RoutingPolicy):
                 self.n_windows, n_pairs)
             return open_w[win_s] & finite_s & ~placed[:, None]
 
+        # the loop condition must agree across devices (the body runs
+        # collectives), so the continue flag is computed IN the body with a
+        # psum-any and carried — a device with no local contenders keeps
+        # spinning while any other still has one
         def cond(carry):
-            mask, _, _, _, k = carry
-            return mask.any() & (k < limit)
+            go, _, _, _, _, k = carry
+            return go & (k < limit)
 
         def body(carry):
-            mask, used, placed, exec_pair, k = carry
+            _, mask, used, placed, exec_pair, k = carry
             active = mask.any(axis=1)
             choice = jnp.argmin(jnp.where(mask, s_s, jnp.inf),
                                 axis=1).astype(jnp.int32)
             cell = seg_s * n_pairs + choice
             rank, totals = windowed_segment_ranks(
                 choice, active, cell, starts, ends, n_pairs)
+            rank, totals = device_prefix_ranks(rank, totals, cell, axis_name)
             fits = active & (used[cell] + rank + 1.0 <= caps_flat[choice])
             exec_pair = jnp.where(fits, choice, exec_pair)
             placed = placed | fits
@@ -618,22 +668,26 @@ class PlacementPolicy(RoutingPolicy):
                 jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals)
             # rejected rows lost their target cell (now full); the carried
             # next-round mask either re-aims them or retires them
-            return open_mask(used, placed), used, placed, exec_pair, k + 1
+            mask = open_mask(used, placed)
+            return (_global_any(mask.any(), axis_name), mask, used, placed,
+                    exec_pair, k + 1)
 
         used_init = (jnp.zeros((self.n_windows * n_pairs,), jnp.float32)
                      if used0 is None
                      else jnp.asarray(used0, jnp.float32).reshape(-1))
         placed0 = jnp.zeros((n,), bool)
-        _, used, placed, exec_pair, _ = jax.lax.while_loop(
+        mask0 = open_mask(used_init, placed0)
+        _, _, used, placed, exec_pair, _ = jax.lax.while_loop(
             cond, body,
-            (open_mask(used_init, placed0), used_init, placed0,
+            (_global_any(mask0.any(), axis_name), mask0, used_init, placed0,
              jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)))
         return self._finalize_cross(s_s, home_s, routable, first_col,
                                     placed, exec_pair, used, inv, state,
-                                    used_init)
+                                    used_init, axis_name)
 
     def _finalize_cross(self, s_s, home_s, routable, first_col, placed,
-                        exec_pair, used, inv, state, used_init=None):
+                        exec_pair, used, inv, state, used_init=None,
+                        axis_name=None):
         """Shared shed/fallback + back-to-stream-order tail of both
         cross-region admission programs. Only *routable* leftovers are
         capacity-shed; their nominal placement is the first-choice pair. A
@@ -666,6 +720,8 @@ class PlacementPolicy(RoutingPolicy):
         shed_pair = (jax.nn.one_hot(first_col, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(
             n_regions, N_TARGETS)
+        if axis_name is not None:
+            shed_pair = jax.lax.psum(shed_pair, axis_name)
         return targets, PlacementState(
             counts=state.counts + counts.astype(jnp.int32),
             shed=shed,
@@ -673,7 +729,7 @@ class PlacementPolicy(RoutingPolicy):
             shed_pair=state.shed_pair + shed_pair)
 
     def _decide_cross_legacy(self, s, win, home, order, inv, state,
-                             caps_rt=None, used0=None):
+                             caps_rt=None, used0=None, axis_name=None):
         """The PR-3 cross-region admission, kept verbatim for inner
         policies without a factorized scorer (and as the benchmark's
         baseline program): best-first preference via a stable (N, pairs)
@@ -705,6 +761,7 @@ class PlacementPolicy(RoutingPolicy):
             cell = seg_s * n_pairs + choice
             rank, totals = windowed_segment_ranks(
                 choice, active, cell, starts, ends, n_pairs)
+            rank, totals = device_prefix_ranks(rank, totals, cell, axis_name)
             fits = active & (used[cell] + rank + 1.0 <= caps_flat[choice])
             exec_pair = jnp.where(fits, choice, exec_pair)
             placed = placed | fits
@@ -713,4 +770,4 @@ class PlacementPolicy(RoutingPolicy):
 
         return self._finalize_cross(s_s, home_s, valid_s[:, 0], pref_s[:, 0],
                                     placed, exec_pair, used, inv, state,
-                                    used_init)
+                                    used_init, axis_name)

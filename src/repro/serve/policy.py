@@ -149,8 +149,12 @@ class RoutingPolicy(abc.ABC):
                factors: Any | None = None,
                fc_table: jax.Array | None = None,
                cap_scale: jax.Array | None = None,
-               used0: jax.Array | None = None
+               used0: jax.Array | None = None,
+               axis_name: str | None = None
                ) -> tuple[jax.Array, Any]:
+        # ``axis_name`` names the mesh axis when the stream is sharded
+        # (repro.serve.distributed); a per-row argmin needs no cross-device
+        # reconciliation, so the default decide simply ignores it.
         s = self.scores(w, env, avail, hour=hour)
         return jnp.argmin(s, axis=-1).astype(jnp.int32), state
 
@@ -315,7 +319,8 @@ class OraclePolicy(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None, fc_table=None, cap_scale=None, used0=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None,
+               axis_name=None):
         out = outputs if outputs is not None else \
             carbon_model.route_many_envs(w, self.infra, env, avail)
         t = {"carbon": out.target, "latency": out.target_latency,
@@ -631,7 +636,15 @@ class CapacityLimiter(RoutingPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None, fc_table=None, cap_scale=None, used0=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None,
+               axis_name=None):
+        if axis_name is not None:
+            raise NotImplementedError(
+                "CapacityLimiter's lax.scan admission walks windows "
+                "sequentially per device and cannot reconcile caps across "
+                "a sharded stream — use PlacementPolicy (identity "
+                "adjacency reproduces CapacityLimiter bit-for-bit) on the "
+                "sharded path")
         n = w.flops.shape[0]
         n_cols = self._caps.size
         region = (jnp.zeros((n,), jnp.int32) if region is None

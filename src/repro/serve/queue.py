@@ -41,6 +41,7 @@ module is that loop:
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,12 +54,15 @@ from repro.serve.forecast import pad_pow2, slice_batch
 from repro.serve.router import RequestBatch
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=(0, 5, 6, 7, 8))
 def _settle_carbon(w, infra, interference, net_slowdown, ci_table,
                    home, er, eh, tgt):
     """(N,) gCO2 of each committed (target, region, hour) at ACTUAL CI —
     the factorized settle einsum, jitted (at 1M requests the eager vmap
-    would dominate the whole serve loop)."""
+    would dominate the whole serve loop). The per-row buffers (workload,
+    home/exec indices, targets) are rebuilt from host arrays each settle,
+    so they are donated — XLA reuses them for output instead of copying;
+    the shared tables (infra, ci_table, …) live across calls and are not."""
     factors = carbon_model.energy_factors_batch(w, infra, interference,
                                                 net_slowdown)
     ci_exec = jnp.concatenate(
@@ -216,15 +220,32 @@ class BatchFormer:
     reference ``ServeEngine``'s KV capacity: a draft never holds more
     concurrent requests (or total prompt+decode tokens) than the engine's
     decode-state slots fit. Drafts cross hourly window boundaries freely.
+
+    With a ``mesh`` attached (the router's routing mesh —
+    ``repro.serve.distributed``), drafts pad to ``n_devices * pow2``
+    instead: always divisible across the mesh, so the sharded program
+    never re-pads to a second shape. Pad rows are structurally unroutable
+    either way, and a device-less former (``mesh=None``) keeps the
+    single-device padding bit-for-bit.
     """
 
     max_batch: int = 65536
     min_pad: int = 16
     engine: object | None = None  # ServeEngine, optional
+    mesh: object | None = None  # 1-D routing mesh, optional
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        self._shards = (1 if self.mesh is None
+                        else int(self.mesh.devices.size))
+
+    def _pad_to(self, k: int) -> int:
+        """Draft pad size: pow-2 bucketing, scaled to a device multiple
+        when a mesh is attached (each shard gets the same pow-2 bucket)."""
+        if self._shards == 1:
+            return pad_pow2(k, self.min_pad)
+        return self._shards * pad_pow2(-(-k // self._shards), self.min_pad)
 
     def draft(self, queue: RequestQueue, ready_idx: np.ndarray, now: int,
               max_defer_h: int = 0) -> list[FormedBatch]:
@@ -242,7 +263,7 @@ class BatchFormer:
                 chunk = chunk[:k]
             i += len(chunk)
             k = len(chunk)
-            pad_to = pad_pow2(k, self.min_pad)
+            pad_to = self._pad_to(k)
             eff_hour = np.maximum(queue.arr_hour[chunk], now).astype(np.int32)
             eff_slack = np.maximum(deadline[chunk] - eff_hour,
                                    0).astype(np.int32)
@@ -404,7 +425,7 @@ def serve_stream(fr, batch: RequestBatch, region: np.ndarray,
     if step_h < 1:
         raise ValueError(f"step_h must be >= 1, got {step_h}")
     queue = RequestQueue.from_stream(batch, region, t_hours)
-    former = former or BatchFormer()
+    former = former or BatchFormer(mesh=getattr(fr, "mesh", None))
     horizon = fr._horizon_h
     n = len(queue)
     if n and (queue.arr_hour.min() < 0 or queue.arr_hour.max() >= horizon):

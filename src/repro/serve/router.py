@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +49,12 @@ from repro.core.constants import N_TARGETS
 from repro.core.infrastructure import Fleet, pack_infra, tpu_fleet
 from repro.core.workloads import Workload, batch_workloads
 from repro.serve.policy import OraclePolicy, RoutingPolicy
+
+# The routing/settle jits donate their per-stream buffers; donation is
+# deliberately partial (f32 workload columns cannot alias the int32/bool
+# outputs), so silence jax's per-shape advisory about the leftover leaves.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -391,6 +398,12 @@ class FleetRouter:
     #: unified carbon-grid abstraction; None = built from ``regions`` with
     #: identity adjacency (no cross-region spill) and PUE 1.
     grid: CarbonGrid | None = None
+    #: 1-D device mesh to shard the routing hot path over
+    #: (``repro.serve.distributed``); None = the single-device program.
+    #: With a mesh attached every stream — ``route_stream``, the rolling
+    #: re-planner, ``serve_stream`` — rides the sharded path, with
+    #: decisions bit-identical to the single-device program.
+    mesh: object | None = None
 
     def __post_init__(self):
         self._infra = pack_infra(self.fleet, self.embodied_model)
@@ -437,7 +450,13 @@ class FleetRouter:
         # program, bit-for-bit.
         split = self.grid.ci_forecast is not None
 
-        @jax.jit
+        # Donate the per-stream buffers (workload columns, region/hour,
+        # order/inv_order, slack): every caller rebuilds them from host
+        # arrays per call, so XLA may reuse their device memory for outputs
+        # instead of copying. The CI tables live on the router across calls,
+        # ``cap_scale`` is shared by all drafts of a serve step, and
+        # ``used0`` may be caller-owned — none of those are donated.
+        @partial(jax.jit, donate_argnums=(0, 2, 3, 7, 8, 9))
         def _fleet_route(w: Workload, avail: jax.Array, region: jax.Array,
                          hour: jax.Array, ci_table: jax.Array,
                          ci_fc: jax.Array, state,
@@ -611,35 +630,52 @@ class FleetRouter:
                            net_slowdown=self._net_slowdown)
 
     def route_stream(self, batch: RequestBatch, region: np.ndarray,
-                     t_hours: np.ndarray) -> FleetRouteResult:
+                     t_hours: np.ndarray, *, mesh=None) -> FleetRouteResult:
         """Route a request stream. ``region`` (N,) int region indices,
         ``t_hours`` (N,) arrival times in absolute hours since the horizon
         start (wrapped modulo the grid horizon — 24 on the default
-        single-day grid, ``n_days * 24`` on a rolling multi-day one)."""
-        return self.route_stream_with_state(batch, region, t_hours)[0]
+        single-day grid, ``n_days * 24`` on a rolling multi-day one).
+        ``mesh`` shards this call across a 1-D device mesh (overriding the
+        router's own ``mesh`` field); decisions are bit-identical either
+        way."""
+        return self.route_stream_with_state(batch, region, t_hours,
+                                            mesh=mesh)[0]
 
     def route_stream_with_state(
             self, batch: RequestBatch, region: np.ndarray,
-            t_hours: np.ndarray) -> tuple[FleetRouteResult, object]:
+            t_hours: np.ndarray, *, mesh=None
+    ) -> tuple[FleetRouteResult, object]:
         """``route_stream`` + the policy's final state (e.g. the
         ``PlacementState`` counters/shed mask of a ``PlacementPolicy``)."""
         hour_np = (np.floor(np.asarray(t_hours))
                    % self._horizon_h).astype(np.int32)
         region_np = np.asarray(region).astype(np.int32)
-        return self._route_arrays(batch, region_np, hour_np)
+        return self._route_arrays(batch, region_np, hour_np, mesh=mesh)
 
     def _route_arrays(self, batch: RequestBatch, region_np: np.ndarray,
                       hour_np: np.ndarray, *, ci_fc: jax.Array | None = None,
                       cap_scale: jax.Array | None = None,
                       used0: jax.Array | None = None,
-                      slack_np: np.ndarray | None = None
-                      ) -> tuple[FleetRouteResult, object]:
+                      slack_np: np.ndarray | None = None,
+                      mesh=None) -> tuple[FleetRouteResult, object]:
         """One jitted ``_fleet_route`` call on prepared int32 arrays — the
         seam the rolling re-planner drives with per-step forecast tables
         (``ci_fc``, defaulting to the grid's own forecast view), budget-
         ledger capacity multipliers, pre-committed cell counts, and
         re-anchored slack. Computes the host-side stream-order hint exactly
-        as ``route_stream_with_state`` always did."""
+        as ``route_stream_with_state`` always did.
+
+        With a mesh (the ``mesh=`` argument, defaulting to the router's
+        ``mesh`` field) the call delegates to the device-sharded program
+        (``repro.serve.distributed``) — which is why every caller of this
+        seam (``serve_stream``, the rolling re-planner) rides the sharded
+        path automatically."""
+        mesh = self.mesh if mesh is None else mesh
+        if mesh is not None and len(batch) > 0:
+            from repro.serve import distributed
+            return distributed.route_arrays_sharded(
+                self, batch, region_np, hour_np, mesh, ci_fc=ci_fc,
+                cap_scale=cap_scale, used0=used0, slack_np=slack_np)
         # stream-order hint: stable radix sort by arrival window — or by
         # (window, home region) when the policy wants finer segments
         # (tier-only PlacementPolicy) — on the host; only computed for

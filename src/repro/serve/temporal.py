@@ -57,7 +57,12 @@ import jax.numpy as jnp
 
 from repro.core import carbon_model
 from repro.core.constants import HOURS_PER_DAY, N_TARGETS
-from repro.serve.placement import PlacementPolicy, windowed_segment_ranks
+from repro.serve.placement import (
+    PlacementPolicy,
+    _global_any,
+    device_prefix_ranks,
+    windowed_segment_ranks,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -239,7 +244,8 @@ class TemporalPolicy(PlacementPolicy):
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
-               factors=None, fc_table=None, cap_scale=None, used0=None):
+               factors=None, fc_table=None, cap_scale=None, used0=None,
+               axis_name=None):
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:
@@ -339,12 +345,15 @@ class TemporalPolicy(PlacementPolicy):
                 rows = shifted_w[win_s].reshape(n, width)
             return rows & finite_s & ~placed[:, None]
 
+        # collectives run in the body, so the continue flag is a carried
+        # psum-any: every device spins until NO device has an open-celled
+        # contender left (see PlacementPolicy._decide_cross)
         def cond(carry):
-            mask, _, _, _, _, k = carry
-            return mask.any() & (k < limit)
+            go, _, _, _, _, _, k = carry
+            return go & (k < limit)
 
         def body(carry):
-            mask, used, placed, exec_pair, exec_d, k = carry
+            _, mask, used, placed, exec_pair, exec_d, k = carry
             active = mask.any(axis=1)
             choice = jnp.argmin(jnp.where(mask, s_s, jnp.inf),
                                 axis=1).astype(jnp.int32)
@@ -353,6 +362,12 @@ class TemporalPolicy(PlacementPolicy):
             local_cell = seg_s * width + choice
             rank_w, totals = windowed_segment_ranks(
                 choice, active, local_cell, starts, ends, width)
+            # sharded streams: lift the within-arrival-window ranks/totals
+            # to global BEFORE the prior-count shift, so the cross-window
+            # contention matrix below is built from fleet-wide totals and
+            # the replicated ``used`` ledger advances identically everywhere
+            rank_w, totals = device_prefix_ranks(rank_w, totals, local_cell,
+                                                 axis_name)
             e = (win_s + d) % W
             pair = sub if not self._diag_only else home_s * N_TARGETS + sub
             cell = e * n_pairs + pair
@@ -383,17 +398,19 @@ class TemporalPolicy(PlacementPolicy):
                 jnp.maximum(jnp.floor(caps_cell - used), 0.0), totals_cell)
             # rejected rows lost their target cell (now full); the carried
             # next-round mask either re-aims them or retires them
-            return (open_mask(used, placed), used, placed, exec_pair,
-                    exec_d, k + 1)
+            mask = open_mask(used, placed)
+            return (_global_any(mask.any(), axis_name), mask, used, placed,
+                    exec_pair, exec_d, k + 1)
 
         # used0 seeds the cell ledger with capacity already committed by
         # earlier rolling-planner steps (None = fresh, the one-shot path)
         used_init = (jnp.zeros((W * n_pairs,), jnp.float32) if used0 is None
                      else jnp.asarray(used0, jnp.float32).reshape(-1))
         placed0 = jnp.zeros((n,), bool)
-        _, used, placed, exec_pair, exec_d, _ = jax.lax.while_loop(
+        mask0 = open_mask(used_init, placed0)
+        _, _, used, placed, exec_pair, exec_d, _ = jax.lax.while_loop(
             cond, body,
-            (open_mask(used_init, placed0), used_init, placed0,
+            (_global_any(mask0.any(), axis_name), mask0, used_init, placed0,
              jnp.zeros((n,), jnp.int32),
              jnp.zeros((n,), jnp.int32),
              jnp.zeros((), jnp.int32)))
@@ -429,6 +446,8 @@ class TemporalPolicy(PlacementPolicy):
         shed_pair = (jax.nn.one_hot(pair0, n_pairs, dtype=jnp.int32)
                      * shed_s[:, None]).sum(axis=0).reshape(
             n_regions, N_TARGETS)
+        if axis_name is not None:
+            shed_pair = jax.lax.psum(shed_pair, axis_name)
         return targets, TemporalState(
             counts=state.counts + counts.astype(jnp.int32),
             shed=shed,
