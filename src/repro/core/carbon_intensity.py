@@ -315,6 +315,19 @@ class CarbonGrid:
                          placement outright (vs ``latency_penalty``, which
                          only re-ranks). Diagonal 0.0; the all-zeros default
                          reproduces the pre-RTT decisions bit-for-bit.
+    ``nbr_idx``          (R, K) int32 SPARSE neighbor lists, or None (the
+                         dense default). Row r holds the ascending region
+                         ids of r's off-diagonal adjacency entries, padded
+                         with -1 — the CSR-style mesoscale representation
+                         (``from_sites`` k-NN graphs at O(100+) sites).
+                         When present, placement scorers walk the K-entry
+                         candidate lists instead of all R columns (O(N·K)
+                         vs O(N·R)); the dense matrices above stay
+                         materialized and consistent, so accounting and
+                         admission are unchanged. ``None`` keeps every
+                         dense-grid decision bit-for-bit.
+    ``nbr_rtt_s``        (R, K) float WAN RTT aligned with ``nbr_idx``
+                         (``rtt_s[r, nbr_idx[r]]``; 0.0 at pad slots).
     """
 
     ci_hourly: jax.Array
@@ -336,10 +349,20 @@ class CarbonGrid:
     #: seed of the fixed forecast-error field ``roll`` re-anchors — the
     #: same seed always draws the same error surface.
     forecast_seed: int = 0
+    #: (R, K) int32 sparse neighbor lists (ascending, -1-padded) — None =
+    #: dense-only grid (the parity default).
+    nbr_idx: jax.Array | None = None
+    #: (R, K) float RTT aligned with ``nbr_idx`` (0.0 at pad slots).
+    nbr_rtt_s: jax.Array | None = None
 
     @property
     def n_regions(self) -> int:
         return self.ci_hourly.shape[0]
+
+    @property
+    def k_neighbors(self) -> int | None:
+        """Padded sparse neighbor-list width K, or None on dense grids."""
+        return None if self.nbr_idx is None else self.nbr_idx.shape[1]
 
     @property
     def horizon_h(self) -> int:
@@ -601,6 +624,115 @@ class CarbonGrid:
                                 day_scale=day_scale,
                                 forecast_sigma_h=forecast_sigma_h,
                                 forecast_seed=forecast_seed)
+
+    def with_sparse_neighbors(self, k: int | None = None) -> "CarbonGrid":
+        """Attach the sparse (R, K) neighbor-list view of this grid's dense
+        adjacency: row r lists r's off-diagonal adjacent regions ascending,
+        padded with -1, with the matching RTT slice. ``k`` defaults to the
+        densest row (a fully-connected grid round-trips at K = R - 1 — the
+        sparse-vs-dense parity pin). The dense matrices are untouched, so
+        everything that consumed them still does."""
+        adj = np.asarray(self.adjacency, bool).copy()
+        np.fill_diagonal(adj, False)
+        counts = adj.sum(axis=1)
+        k_min = int(counts.max()) if counts.size else 0
+        if k is None:
+            k = k_min
+        if k < k_min:
+            raise ValueError(
+                f"k={k} cannot hold the densest adjacency row "
+                f"({k_min} neighbors)")
+        r = self.n_regions
+        idx = np.full((r, max(k, 1)), -1, np.int32)
+        rtt = np.zeros((r, max(k, 1)), np.float32)
+        rtt_d = np.asarray(self.rtt_s, np.float32)
+        for i in range(r):
+            nbrs = np.nonzero(adj[i])[0].astype(np.int32)  # ascending
+            idx[i, :len(nbrs)] = nbrs
+            rtt[i, :len(nbrs)] = rtt_d[i, nbrs]
+        return dataclasses.replace(self, nbr_idx=jnp.asarray(idx),
+                                   nbr_rtt_s=jnp.asarray(rtt))
+
+    @classmethod
+    def from_sites(cls, n_sites: int, k_neighbors: int, seed: int = 0, *,
+                   ci_jitter: float = 0.12, rtt_per_unit_s: float = 0.06,
+                   penalty_per_unit: float = 0.10, pue: float = 1.0,
+                   n_days: int = 1, forecast_sigma_h: float = 0.0,
+                   forecast_seed: int = 0) -> "CarbonGrid":
+        """Mesoscale site grid: O(100+) edge sites on a k-NN graph.
+
+        Each site anchors to one of the four canonical grid profiles
+        (round-robin, matching ``site_regions``) with a per-site
+        multiplicative CI perturbation (CarbonEdge's observation: CI varies
+        at mesoscale even within one regional grid) — so neighboring sites
+        offer genuinely different carbon menus. Sites are placed uniformly
+        in the unit square; each may spill to its ``k_neighbors`` nearest
+        sites (a DIRECTED k-NN graph), with distance-proportional WAN RTT
+        and latency penalty. The sparse ``(R, K)`` neighbor lists are
+        attached alongside the (still materialized) dense matrices, so
+        placement scoring is O(N·K) while admission and accounting reuse
+        the dense machinery unchanged.
+        """
+        if n_sites < 2:
+            raise ValueError(f"n_sites must be >= 2, got {n_sites}")
+        if not 1 <= k_neighbors < n_sites:
+            raise ValueError(
+                f"k_neighbors must be in [1, {n_sites - 1}], "
+                f"got {k_neighbors}")
+        rng = np.random.default_rng(seed)
+        pos = rng.uniform(0.0, 1.0, (n_sites, 2))
+        factor = np.clip(1.0 + ci_jitter * rng.standard_normal(n_sites),
+                         0.2, None).astype(np.float32)
+
+        ci_rows, mob, core = [], [], []
+        for i in range(n_sites):
+            trace = grid_trace(Grid(i % len(Grid)))
+            ci_rows.append(np.asarray(trace.ci_hourly, np.float32)
+                           * factor[i])
+            mob.append(float(mobile_carbon_intensity(
+                ChargingBehavior.AVERAGE, trace)) * factor[i])
+            core.append(float(trace.ci_mean) * factor[i])
+
+        dist = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+        np.fill_diagonal(dist, np.inf)
+        # directed k-NN: each site spills to its k nearest sites
+        order = np.argsort(dist, axis=1, kind="stable")[:, :k_neighbors]
+        adjacency = np.eye(n_sites, dtype=bool)
+        rows = np.repeat(np.arange(n_sites), k_neighbors)
+        adjacency[rows, order.reshape(-1)] = True
+        np.fill_diagonal(dist, 0.0)
+        rtt = (rtt_per_unit_s * dist).astype(np.float32)
+        penalty = (1.0 + penalty_per_unit * dist).astype(np.float32)
+        np.fill_diagonal(penalty, 1.0)
+        nbr_idx = np.sort(order, axis=1).astype(np.int32)
+        nbr_rtt = rtt[np.arange(n_sites)[:, None], nbr_idx]
+
+        grid = cls(
+            ci_hourly=jnp.asarray(np.stack(ci_rows)),
+            ci_mobile=jnp.asarray(np.array(mob, np.float32)),
+            ci_core=jnp.asarray(np.array(core, np.float32)),
+            pue=jnp.broadcast_to(
+                jnp.asarray(np.float32(pue)), (n_sites, HOURS_PER_DAY)),
+            adjacency=jnp.asarray(adjacency),
+            latency_penalty=jnp.asarray(penalty),
+            rtt_s=jnp.asarray(rtt),
+            nbr_idx=jnp.asarray(nbr_idx),
+            nbr_rtt_s=jnp.asarray(nbr_rtt),
+        )
+        if n_days != 1:
+            grid = grid.repeat(n_days)
+        if forecast_sigma_h:
+            grid = grid.forecast_from_actual(forecast_sigma_h,
+                                             seed=forecast_seed)
+        return grid
+
+
+def site_regions(n_sites: int) -> tuple[RegionSpec, ...]:
+    """Per-site ``RegionSpec``s matching ``CarbonGrid.from_sites``'s
+    round-robin anchor assignment — what ``FleetRouter`` needs when a
+    mesoscale grid outgrows ``DEFAULT_REGIONS``."""
+    return tuple(RegionSpec(f"site{i:03d}", Grid(i % len(Grid)))
+                 for i in range(n_sites))
 
 
 # --- Uncertainty injection (paper §5.2) ---------------------------------------

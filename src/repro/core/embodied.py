@@ -65,6 +65,26 @@ class DeviceBOM:
     n_packages: int = 1
 
 
+def amortized_g_per_hour(embodied_g: float, lifetime_h: float,
+                         utilization: float = 1.0) -> float:
+    """Amortized embodied carbon per server-hour (paper §4.3).
+
+    The paper spreads a device's embodied CF uniformly over its service
+    lifetime; each provisioned hour is charged ``embodied_g / lifetime_h``.
+    ``utilization`` < 1 concentrates the same total onto the fraction of
+    the lifetime the device is actually provisioned (a server kept for 4
+    years but serving half the hours carries twice the per-served-hour
+    charge) — the CASPER-style accounting the provisioning subsystem
+    charges each (site, tier, hour) server cell.
+    """
+    if lifetime_h <= 0:
+        raise ValueError(f"lifetime_h must be positive, got {lifetime_h}")
+    if not 0.0 < utilization <= 1.0:
+        raise ValueError(
+            f"utilization must be in (0, 1], got {utilization}")
+    return embodied_g / (lifetime_h * utilization)
+
+
 def act_embodied_g(bom: DeviceBOM) -> float:
     """ACT embodied CF (grams CO2e) for one unit."""
     fab = bom.fab

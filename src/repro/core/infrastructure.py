@@ -256,6 +256,33 @@ def tpu_fleet() -> Fleet:
                  n_user_edge=16.0, n_user_dc=2048.0, n_batch_dc=256.0)
 
 
+def server_carbon_rates(fleet: Fleet, embodied_model: str = "act", *,
+                        utilization: float = 1.0):
+    """Per-tier provisioning carbon rates (paper §4.3 accounting).
+
+    Returns ``(emb_g_per_h, idle_w)`` — two (3,) float arrays indexed
+    [mobile, edge_dc, hyper_dc]: the amortized embodied carbon charged to
+    every provisioned server-hour (the tier's embodied CF spread over
+    ``lifetime x utilization`` via ``embodied.amortized_g_per_hour``) and
+    the wall idle power (tier PUE folded in) whose operational carbon a
+    provisioning plan charges at the hosting site's hourly CI. The mobile
+    tier is user-owned — serving fleets never provision tier 0 — but is
+    included for shape symmetry with the (R, 3) capacity matrices.
+    """
+    import numpy as np
+
+    from repro.core.embodied import amortized_g_per_hour
+
+    if embodied_model not in ("act", "lca"):
+        raise ValueError(f"unknown embodied model: {embodied_model!r}")
+    tiers = (fleet.mobile, fleet.edge_dc, fleet.hyper_dc)
+    emb = np.array([amortized_g_per_hour(
+        t.ecf_act_g if embodied_model == "act" else t.ecf_lca_g,
+        t.lifetime_s / 3600.0, utilization) for t in tiers])
+    idle = np.array([t.p_idle * t.pue for t in tiers])
+    return emb, idle
+
+
 # ------------------------------------------------------------------------------
 # Packed array form for the jitted carbon model
 # ------------------------------------------------------------------------------

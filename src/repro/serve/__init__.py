@@ -1,11 +1,18 @@
 """Serving: batched engine, GreenScale routers, pluggable routing policies,
 the geo-temporal placement layer, the temporal deferral engine, the rolling
 forecast-native re-planner, the continuous-batching request queue with
-online policy refit, and the device-sharded routing hot path
+online policy refit, the device-sharded routing hot path
 (``repro.serve.distributed``: attach a mesh via ``FleetRouter(mesh=...)``
-and every entry point shards bit-identically)."""
+and every entry point shards bit-identically), and joint capacity
+provisioning over mesoscale sparse site grids
+(``repro.serve.provision`` + ``CarbonGrid.from_sites``)."""
 
-from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid, RegionSpec
+from repro.core.carbon_intensity import (
+    DEFAULT_REGIONS,
+    CarbonGrid,
+    RegionSpec,
+    site_regions,
+)
 from repro.serve.engine import ServeEngine
 from repro.serve.forecast import (
     EmissionsLedger,
@@ -30,6 +37,14 @@ from repro.serve.placement import (
     PlacementState,
     device_prefix_ranks,
     windowed_segment_ranks,
+)
+from repro.serve.provision import (
+    ProvisioningPlan,
+    demand_from_arrivals,
+    oracle_plan,
+    provision_greedy,
+    standing_cost_g,
+    static_overprovision_plan,
 )
 from repro.serve.temporal import TemporalPolicy, TemporalState
 from repro.serve.policy import (

@@ -255,6 +255,57 @@ class PlacementPolicy(RoutingPolicy):
         self.stream_order_key = ("window_region" if self._diag_only
                                  else "window")
         self._has_rtt = bool(np.asarray(grid.rtt_s).any())
+        # Sparse neighbor-list grids (``CarbonGrid.from_sites`` /
+        # ``with_sparse_neighbors``): precompute each home's candidate list
+        # [home] + neighbors in ASCENDING region order — local argmin
+        # tie-breaking over the gathered (C = K+1) columns then matches the
+        # dense program's region-major column order exactly, which is what
+        # makes the sparse path bit-identical on an embedded dense grid.
+        # Pad slots alias the home region (a safe gather) and are masked
+        # invalid. Scoring walks these C columns (O(N·K)); admission maps
+        # each local column back to its GLOBAL (region, tier) pair, so the
+        # segment-rank machinery (and the sharded reconciliation) runs
+        # unchanged on global cells.
+        self._sparse = (grid.nbr_idx is not None) and not self._diag_only
+        if self._sparse:
+            if not self._factorizable:
+                raise ValueError(
+                    "sparse neighbor-list grids route through the "
+                    "factorized einsum scorer — the inner policy offers no "
+                    "scores_from_factors (or factorized=False)")
+            r = grid.n_regions
+            nbr = np.asarray(grid.nbr_idx)
+            if nbr.ndim != 2 or nbr.shape[0] != r:
+                raise ValueError(f"nbr_idx must be ({r}, K), got {nbr.shape}")
+            cand = np.concatenate(
+                [np.arange(r, dtype=np.int64)[:, None],
+                 np.where(nbr >= 0, nbr.astype(np.int64), r)], axis=1)
+            cand.sort(axis=1)  # ascending; pads (value r) land at the end
+            valid = cand < r
+            rows = np.arange(r)[:, None]
+            cand_idx = np.where(valid, cand, rows)
+            adj_sparse = np.zeros((r, r), bool)
+            adj_sparse[np.repeat(np.arange(r), cand_idx.shape[1]),
+                       cand_idx.reshape(-1)] = True
+            if not np.array_equal(adj_sparse, adjacency):
+                raise ValueError(
+                    "grid.nbr_idx disagrees with the dense adjacency — the "
+                    "sparse neighbor lists must enumerate exactly the "
+                    "off-diagonal True entries of each adjacency row")
+            self._cand_idx = jnp.asarray(cand_idx.astype(np.int32))
+            self._cand_ok = jnp.asarray(valid)
+            self._cand_pen = jnp.asarray(np.asarray(
+                grid.latency_penalty)[rows, cand_idx].astype(np.float32))
+            self._cand_rtt = jnp.asarray(np.asarray(
+                grid.rtt_s)[rows, cand_idx].astype(np.float32))
+            # first occurrence of the home id is the genuine home slot
+            # (pad aliases sort after every real candidate)
+            self._cand_home_slot = jnp.asarray(np.argmax(
+                cand_idx == rows, axis=1).astype(np.int32))
+            tiers = np.arange(N_TARGETS, dtype=np.int64)
+            self._cand_pair = jnp.asarray(
+                (cand_idx[:, :, None] * N_TARGETS + tiers).reshape(
+                    r, -1).astype(np.int32))
         # The legacy per-region sweep scores through ``inner.scores``, which
         # has no seam for the WAN-hop latency — only the factorized path
         # models rtt_s in the QoS check.
@@ -284,7 +335,8 @@ class PlacementPolicy(RoutingPolicy):
             return
         for field in ("ci_hourly", "ci_mobile", "ci_core", "pue",
                       "adjacency", "latency_penalty", "rtt_s",
-                      "ci_forecast", "forecast_sigma_h"):
+                      "ci_forecast", "forecast_sigma_h",
+                      "nbr_idx", "nbr_rtt_s"):
             a, b = getattr(self.grid, field), getattr(grid, field)
             same = ((a is None) == (b is None)) and (
                 a is None or np.array_equal(np.asarray(a), np.asarray(b)))
@@ -416,6 +468,42 @@ class PlacementPolicy(RoutingPolicy):
                               jnp.float32)
         return jax.vmap(one_region)(cand_ci_dc, extra)
 
+    def sparse_pair_scores_from_factors(self, factors, w, env, avail,
+                                        home: jax.Array, hour: jax.Array,
+                                        fc_table: jax.Array | None = None
+                                        ) -> jax.Array:
+        """``pair_scores_from_factors`` on the gathered neighbor lists:
+        (N, C, 3) scores over each request's C = K+1 candidate sites
+        (``_cand_idx[home]`` — home plus sparse neighbors, ascending)
+        instead of all R regions, so scoring cost is O(N·K). Per candidate
+        row the einsum is arithmetic-identical to the dense program's row
+        for that region — the parity the sparse tests pin bit-for-bit."""
+        table = self.grid.table_forecast if fc_table is None else fc_table
+        h = table.shape[1]
+        cand_r = self._cand_idx[home]  # (N, C)
+        ci_dc = table[..., 2:][cand_r, (hour % h)[:, None]]  # (N, C, 3)
+        ci_dc = jnp.moveaxis(ci_dc, 0, 1)  # (C, N, 3)
+        extra = None if not self._has_rtt else self._cand_rtt[home].T
+        s = self._inner_pair_scores(factors, w, env.ci, ci_dc, avail,
+                                    extra, hour=hour,
+                                    interference=env.interference,
+                                    net_slowdown=env.net_slowdown)
+        return self._mask_sparse(jnp.moveaxis(s, 0, 1), home, cand_r)
+
+    def _mask_sparse(self, s: jax.Array, home: jax.Array,
+                     cand_r: jax.Array) -> jax.Array:
+        """``_mask_pairs`` on the gathered candidate axis: the same
+        sign-aware latency penalty, +inf at pad slots (``_cand_ok`` False)
+        and at remote (site', MOBILE) columns — identical float values to
+        the dense mask at each candidate's global column."""
+        pen = self._cand_pen[home][:, :, None]  # (N, C, 1)
+        ok = self._cand_ok[home]  # (N, C)
+        mobile = (jnp.arange(N_TARGETS) == 0)[None, None, :]
+        remote = cand_r != home[:, None]  # (N, C)
+        allowed = ok[:, :, None] & ~(remote[:, :, None] & mobile)
+        penalized = jnp.where(s >= 0.0, s * pen, s / pen)
+        return jnp.where(allowed, penalized, jnp.inf)
+
     def _use_factors(self, factors) -> bool:
         """Can this decide() call run the factorized program? Needs an
         inner-policy einsum scorer plus either router-provided factors or
@@ -492,6 +580,23 @@ class PlacementPolicy(RoutingPolicy):
                                   outputs)  # (N, 3)
             return self._decide_diag(s, win, home, order, inv, state,
                                      caps_rt, used0, axis_name)
+        if getattr(self, "_sparse", False):
+            # gathered O(N·K) scoring; admission on global (region, tier)
+            # cells via the per-column pair map
+            if not self._use_factors(factors):
+                raise ValueError(
+                    "sparse neighbor-list grids need EnergyFactors — route "
+                    "via a FleetRouter (which precomputes them) or give "
+                    "the inner policy an infra")
+            if factors is None:
+                factors = carbon_model.energy_factors_batch(
+                    w, self.inner.infra, env.interference, env.net_slowdown)
+            s = self.sparse_pair_scores_from_factors(
+                factors, w, env, avail, home, hr,
+                fc_table=fc_table).reshape(n, -1)
+            return self._decide_cross(s, win, home, order, inv, state,
+                                      caps_rt, used0, axis_name,
+                                      cand_pair=self._cand_pair)
         if self._use_factors(factors):
             s = self._cross_scores_factorized(
                 factors, w, env, avail, home, hr,
@@ -606,7 +711,8 @@ class PlacementPolicy(RoutingPolicy):
             shed_pair=state.shed_pair + shed_pair)
 
     def _decide_cross(self, s, win, home, order, inv, state,
-                      caps_rt=None, used0=None, axis_name=None):
+                      caps_rt=None, used0=None, axis_name=None,
+                      cand_pair=None):
         """Cross-region admission: skip-full best-open attempts under a
         ``lax.while_loop``. Each round every unplaced request targets its
         best candidate whose cell still has budget (a masked argmin — no
@@ -618,17 +724,37 @@ class PlacementPolicy(RoutingPolicy):
         finite-score cell is at cap — without a fixed round count. Priority
         is (attempt round, stream order within the window). ``caps_rt`` /
         ``used0`` are the runtime-capacity seams (None = configured caps,
-        fresh cells)."""
+        fresh cells).
+
+        ``cand_pair`` is the sparse-grid seam: an (R, C·3) int32 map from
+        each home's LOCAL score column to its GLOBAL (region, tier) pair.
+        ``s`` then has C·3 gathered columns per row, but ranks, the
+        capacity ledger, and the open-cell test all run on global cells —
+        the admission machinery (and its sharded reconciliation) is
+        untouched. Local columns are in ascending global-pair order, so
+        argmin tie-breaking matches the dense program. None = dense: the
+        column index IS the pair."""
         n = s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if caps_rt is None:
             caps_rt = self._caps
         win_s, home_s, s_s = win[order], home[order], s[order]
-        finite_s = jnp.isfinite(s_s)  # (N, pairs)
+        finite_s = jnp.isfinite(s_s)  # (N, width)
         routable = finite_s.any(axis=1)
         # ties break by column index (region-major, tier-minor), matching
         # the stable-argsort preference of the tier-only mode
-        first_col = jnp.argmin(s_s, axis=1).astype(jnp.int32)
+        col_pair_s = None if cand_pair is None else cand_pair[home_s]
+        to_pair = (lambda col: col if col_pair_s is None
+                   else jnp.take_along_axis(
+                       col_pair_s, col[:, None], axis=1)[:, 0])
+        first_col = to_pair(jnp.argmin(s_s, axis=1).astype(jnp.int32))
+        home_row_s = None
+        if col_pair_s is not None:
+            c = s_s.shape[1] // N_TARGETS
+            home_row_s = jnp.take_along_axis(
+                s_s.reshape(n, c, N_TARGETS),
+                self._cand_home_slot[home_s][:, None, None],
+                axis=1)[:, 0]
         seg_s = win_s
         starts = jnp.searchsorted(seg_s, jnp.arange(self.n_windows))
         ends = jnp.concatenate([starts[1:], jnp.array([n])])
@@ -637,12 +763,15 @@ class PlacementPolicy(RoutingPolicy):
         limit = self.n_windows * n_pairs + 1  # closable cells + 1
 
         def open_mask(used, placed):
-            """(N, pairs) — open-celled finite candidates of unplaced rows.
+            """(N, width) — open-celled finite candidates of unplaced rows.
             Its any() is the loop condition: empty means every unplaced
             routable row is out of open cells, i.e. shed."""
-            open_w = (jnp.floor(caps_cell - used) >= 1.0).reshape(
-                self.n_windows, n_pairs)
-            return open_w[win_s] & finite_s & ~placed[:, None]
+            open_flat = jnp.floor(caps_cell - used) >= 1.0
+            if col_pair_s is None:
+                open_s = open_flat.reshape(self.n_windows, n_pairs)[win_s]
+            else:
+                open_s = open_flat[win_s[:, None] * n_pairs + col_pair_s]
+            return open_s & finite_s & ~placed[:, None]
 
         # the loop condition must agree across devices (the body runs
         # collectives), so the continue flag is computed IN the body with a
@@ -655,8 +784,8 @@ class PlacementPolicy(RoutingPolicy):
         def body(carry):
             _, mask, used, placed, exec_pair, k = carry
             active = mask.any(axis=1)
-            choice = jnp.argmin(jnp.where(mask, s_s, jnp.inf),
-                                axis=1).astype(jnp.int32)
+            choice = to_pair(jnp.argmin(jnp.where(mask, s_s, jnp.inf),
+                                        axis=1).astype(jnp.int32))
             cell = seg_s * n_pairs + choice
             rank, totals = windowed_segment_ranks(
                 choice, active, cell, starts, ends, n_pairs)
@@ -683,24 +812,28 @@ class PlacementPolicy(RoutingPolicy):
              jnp.zeros((n,), jnp.int32), jnp.zeros((), jnp.int32)))
         return self._finalize_cross(s_s, home_s, routable, first_col,
                                     placed, exec_pair, used, inv, state,
-                                    used_init, axis_name)
+                                    used_init, axis_name,
+                                    home_row_s=home_row_s)
 
     def _finalize_cross(self, s_s, home_s, routable, first_col, placed,
                         exec_pair, used, inv, state, used_init=None,
-                        axis_name=None):
+                        axis_name=None, home_row_s=None):
         """Shared shed/fallback + back-to-stream-order tail of both
         cross-region admission programs. Only *routable* leftovers are
         capacity-shed; their nominal placement is the first-choice pair. A
         request with no finite-score pair at all was never a capacity
         decision — it takes the uncapped degenerate fallback on its HOME
         region (argmin of an all-inf row is MOBILE, matching the uncapped
-        router)."""
+        router). ``home_row_s`` carries the pre-gathered (N, 3) home-tier
+        scores when ``s_s``'s columns are a sparse candidate list (the
+        home column index is then per-row); None = dense columns."""
         n = s_s.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         shed_s = routable & ~placed
-        home_row_s = jnp.take_along_axis(
-            s_s.reshape(n, n_regions, N_TARGETS),
-            home_s[:, None, None], axis=1)[:, 0]  # (N, 3)
+        if home_row_s is None:
+            home_row_s = jnp.take_along_axis(
+                s_s.reshape(n, n_regions, N_TARGETS),
+                home_s[:, None, None], axis=1)[:, 0]  # (N, 3)
         fb_pair = jnp.where(routable, first_col,
                             home_s * N_TARGETS + jnp.argmin(
                                 home_row_s, axis=1).astype(jnp.int32))

@@ -81,7 +81,10 @@ both):
       the vectorized form over candidate regions: ``home_ci`` (N, 5) anchors
       the non-relocating [mobile, edge_net] components, ``cand_ci_dc``
       (R, N, 3) each candidate's relocating columns, ``extra_latency``
-      (R, N) the per-candidate hop.
+      (R, N) the per-candidate hop. The leading candidate axis is
+      shape-generic: sparse mesoscale grids pass gathered per-row neighbor
+      lists ((C, N, 3) with C = K+1 candidates) instead of all R regions —
+      each row is arithmetically identical to the matching dense row.
 """
 
 from __future__ import annotations

@@ -402,7 +402,7 @@ def serve_stream(fr, batch: RequestBatch, region: np.ndarray,
                  t_hours: np.ndarray, *, step_h: int = 1,
                  pool: WorkerPool | None = None,
                  former: BatchFormer | None = None,
-                 refitter=None) -> QueueServeResult:
+                 refitter=None, plan=None) -> QueueServeResult:
     """Drive ``fr`` (any capacity-aware ``FleetRouter``) as a continuous-
     batching serve loop over the stream. See the module docstring for the
     mechanics; the commit rule per draft row is:
@@ -420,10 +420,17 @@ def serve_stream(fr, batch: RequestBatch, region: np.ndarray,
     (``repro.serve.online.OnlineRefitter``), every committed draft is
     observed and the router is hot-swapped between steps when enough
     settled tuples accumulate; the (possibly refitted) final router is
-    ``refitter.router`` after the call.
+    ``refitter.router`` after the call. With a ``plan``
+    (``repro.serve.provision.ProvisioningPlan``), each step starts by
+    launching/draining the pool toward the plan's server counts for that
+    hour (a pool is created if none was given), so admission sees exactly
+    the provisioned capacity.
     """
     if step_h < 1:
         raise ValueError(f"step_h must be >= 1, got {step_h}")
+    if plan is not None and pool is None:
+        pool = WorkerPool(plan.n_regions,
+                          slots_per_worker=plan.slots_per_server)
     queue = RequestQueue.from_stream(batch, region, t_hours)
     former = former or BatchFormer(mesh=getattr(fr, "mesh", None))
     horizon = fr._horizon_h
@@ -454,6 +461,12 @@ def serve_stream(fr, batch: RequestBatch, region: np.ndarray,
     for now in range(0, horizon, step_h):
         last = now + step_h >= horizon
         if pool is not None:
+            if plan is not None:
+                # retire last step's drains, then steer the pool toward the
+                # plan's counts for this hour; with the default one-step
+                # launch delay the tick below brings them online this step
+                pool.terminate_drained()
+                plan.apply_to_pool(pool, now)
             pool.tick()
             slots = pool.cap_matrix()
             cap_scale = jnp.asarray(slots)

@@ -43,6 +43,7 @@ from repro.core.carbon_intensity import (
     DEFAULT_REGIONS,
     CarbonGrid,
     RegionSpec,
+    site_regions,
 )
 from repro.core.carbon_model import Environment, RouteOutputs
 from repro.core.constants import N_TARGETS
@@ -413,8 +414,16 @@ class FleetRouter:
         if self.grid is None:
             self.grid = CarbonGrid.from_regions(self.regions)
         elif self.grid.n_regions != len(self.regions):
-            raise ValueError(f"grid covers {self.grid.n_regions} regions, "
-                             f"router has {len(self.regions)}")
+            if (self.regions is DEFAULT_REGIONS
+                    and self.grid.n_regions > len(DEFAULT_REGIONS)):
+                # mesoscale grids (CarbonGrid.from_sites) carry their own
+                # site count; synthesize matching site specs rather than
+                # forcing callers to hand-build O(100) RegionSpecs
+                self.regions = site_regions(self.grid.n_regions)
+            else:
+                raise ValueError(
+                    f"grid covers {self.grid.n_regions} regions, "
+                    f"router has {len(self.regions)}")
         self._ci_table = self.grid.table  # (R, H, 5) actuals — the charge
         # forecast view the policies decide on; the SAME buffer as
         # ``_ci_table`` when no forecast is attached (the split is inert)

@@ -195,6 +195,66 @@ def deferrable_stream_multiday(
     return batch, region, t_hours + 24.0 * day
 
 
+def grid_event_stream(
+    n: int, grid, *, seed: int = 0,
+    ci_step_region: int | None = 0,
+    ci_step_window: tuple[int, int] = (6, 18),
+    ci_step_mult: float = 2.5,
+    outage_site: int | None = 1,
+    outage_window: tuple[int, int] = (8, 12),
+):
+    """Grid-event scenario: a regional CI step change plus a site outage.
+
+    Returns ``(batch, region, t_hours, grid2, outage)`` against an
+    existing (typically mesoscale sparse, ``CarbonGrid.from_sites``)
+    grid:
+
+      * **CI step change** — ``ci_step_region``'s hourly CI is multiplied
+        by ``ci_step_mult`` inside ``ci_step_window`` (a coal plant
+        ramping in / a renewable lull), baked into the returned grid's
+        actuals (and forecast view, when one is attached — the event is
+        observed, not a surprise), so carbon-aware policies route around
+        it while CI-blind ones pay it.
+      * **Site outage** — ``outage`` is an (R, H) bool mask, True where
+        ``outage_site`` is dark during ``outage_window``. Capacity-side:
+        zero the site's DC columns of ``cap_scale`` for masked hours —
+        equivalently every adjacency edge INTO the site is dead for the
+        window, so its home traffic must spill along its sparse neighbor
+        list (or shed when the neighborhood is full). The requester-owned
+        mobile tier stays up.
+
+    Arrivals are the canonical request mix, uniformly homed across sites,
+    diurnal within each day of the grid's horizon.
+    """
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    batch = synthetic_stream(rng, n)
+    r_count = grid.n_regions
+    ci = np.asarray(grid.ci_hourly).copy()
+    h_count = ci.shape[1]
+    region = rng.integers(0, r_count, n)
+    days = max(h_count // 24, 1)
+    t_hours = np.clip(diurnal_hours(rng, n) + 24.0 * rng.integers(0, days, n),
+                      0.0, h_count - 1e-6)
+
+    if ci_step_region is not None:
+        a, b = ci_step_window
+        ci[ci_step_region, a:b] *= ci_step_mult
+        changes = {"ci_hourly": jnp.asarray(ci)}
+        if grid.ci_forecast is not None:
+            fc = np.asarray(grid.ci_forecast).copy()
+            fc[ci_step_region, a:b] *= ci_step_mult
+            changes["ci_forecast"] = jnp.asarray(fc)
+        grid = dataclasses.replace(grid, **changes)
+
+    outage = np.zeros((r_count, h_count), bool)
+    if outage_site is not None:
+        a, b = outage_window
+        outage[outage_site, a:b] = True
+    return batch, region, t_hours, grid, outage
+
+
 def forecast_scenario(
     n: int, regions, *, n_days: int = 2, sigma_h: float = 0.03,
     seed: int = 0, latency_penalty: float = 1.05,

@@ -208,7 +208,11 @@ class TemporalPolicy(PlacementPolicy):
         table = (self.grid.table_forecast if fc_table is None
                  else fc_table)  # (R, H, 5)
         table_dc = table[..., 2:]  # relocating [edge_dc, core_net, hyper_dc]
-        extra = None if not self._has_rtt else self.grid.rtt_s.T[:, home]
+        sparse = getattr(self, "_sparse", False)
+        cand_r = self._cand_idx[home] if sparse else None  # (N, C)
+        extra = (None if not self._has_rtt else
+                 (self._cand_rtt[home].T if sparse
+                  else self.grid.rtt_s.T[:, home]))
         ctx = dict(interference=env.interference,
                    net_slowdown=env.net_slowdown)
         sigma = float(self.grid.forecast_sigma_h)
@@ -227,6 +231,17 @@ class TemporalPolicy(PlacementPolicy):
                 return self._inner_pair_scores(factors, w, home_ci, ci_dc,
                                                avail, None, hour=he_d,
                                                **ctx)[0]  # (N, 3)
+            if sparse:
+                # gathered candidate sites only: O(N·K) per defer
+                ci_dc = jnp.moveaxis(
+                    table_dc[cand_r, he_d[:, None]], 0, 1)  # (C, N, 3)
+                if risky:
+                    home_ci, ci_dc = carbon_model.inflate_ci_risk(
+                        home_ci, ci_dc, rscale)
+                s = self._inner_pair_scores(factors, w, home_ci, ci_dc,
+                                            avail, extra, hour=he_d, **ctx)
+                return self._mask_sparse(jnp.moveaxis(s, 0, 1), home,
+                                         cand_r)  # (N, C, 3)
             ci_dc = table_dc[:, he_d, :]  # (R, N, 3)
             if risky:
                 home_ci, ci_dc = carbon_model.inflate_ci_risk(
@@ -279,13 +294,16 @@ class TemporalPolicy(PlacementPolicy):
         d_ok = ((jnp.arange(S + 1)[:, None] <= slack_w[None, :])
                 & ((hr[None, :] + jnp.arange(S + 1, dtype=hr.dtype)[:, None])
                    < self._horizon_h))  # (S+1, N)
+        sparse = getattr(self, "_sparse", False)
         if self._diag_only:
             # home is the only candidate region ((S+1, N, 3) scores): the
             # width-(S+1)*3 home columns keep the admission one-hots narrow
             sub_p = N_TARGETS
             s_all = jnp.where(d_ok[:, :, None], s_all, jnp.inf)
         else:
-            sub_p = n_pairs
+            # sparse grids enumerate only the gathered (home + neighbors)
+            # candidate columns — width (S+1)*C*3 instead of (S+1)*R*3
+            sub_p = self._cand_pair.shape[1] if sparse else n_pairs
             s_all = jnp.where(d_ok[:, :, None, None], s_all, jnp.inf)
         s = jnp.moveaxis(s_all, 0, 1).reshape(n, (S + 1) * sub_p)
         width = (S + 1) * sub_p
@@ -296,6 +314,8 @@ class TemporalPolicy(PlacementPolicy):
         # LATER windows' cells, handled by the prior-count matrix below.
         order, inv = self._to_stream_order(n, win, home, order, inv_order)
         win_s, home_s, hr_s, s_s = win[order], home[order], hr[order], s[order]
+        # per-row local-column -> GLOBAL pair map (sparse grids only)
+        cand_pair_s = self._cand_pair[home_s] if sparse else None
         finite_s = jnp.isfinite(s_s)  # (N, width)
         routable = finite_s.any(axis=1)
         # first choice over the joint candidate list; ties break by column
@@ -341,6 +361,11 @@ class TemporalPolicy(PlacementPolicy):
             if self._diag_only:
                 look = shifted_w.reshape(W, S + 1, n_regions, N_TARGETS)
                 rows = look[win_s, :, home_s, :].reshape(n, width)
+            elif sparse:
+                # gather only each row's candidate columns per defer
+                rows = shifted_w[win_s[:, None, None],
+                                 jnp.arange(S + 1)[None, :, None],
+                                 cand_pair_s[:, None, :]].reshape(n, width)
             else:
                 rows = shifted_w[win_s].reshape(n, width)
             return rows & finite_s & ~placed[:, None]
@@ -359,9 +384,24 @@ class TemporalPolicy(PlacementPolicy):
                                 axis=1).astype(jnp.int32)
             d = choice // sub_p
             sub = choice % sub_p
-            local_cell = seg_s * width + choice
-            rank_w, totals = windowed_segment_ranks(
-                choice, active, local_cell, starts, ends, width)
+            if self._diag_only:
+                pair = home_s * N_TARGETS + sub
+                local_cell = seg_s * width + choice
+                rank_w, totals = windowed_segment_ranks(
+                    choice, active, local_cell, starts, ends, width)
+            else:
+                # rank on the dense-equivalent (defer, GLOBAL pair) column:
+                # within one arrival window the same exec cell implies the
+                # same defer, so (d, pair) keys exec cells exactly — sparse
+                # local columns alias into the dense program's ranks/totals
+                # and the prior-count matrix below runs unchanged
+                pair = (sub if cand_pair_s is None else jnp.take_along_axis(
+                    cand_pair_s, sub[:, None], axis=1)[:, 0])
+                rank_col = d * n_pairs + pair
+                rank_width = (S + 1) * n_pairs
+                local_cell = seg_s * rank_width + rank_col
+                rank_w, totals = windowed_segment_ranks(
+                    rank_col, active, local_cell, starts, ends, rank_width)
             # sharded streams: lift the within-arrival-window ranks/totals
             # to global BEFORE the prior-count shift, so the cross-window
             # contention matrix below is built from fleet-wide totals and
@@ -369,7 +409,6 @@ class TemporalPolicy(PlacementPolicy):
             rank_w, totals = device_prefix_ranks(rank_w, totals, local_cell,
                                                  axis_name)
             e = (win_s + d) % W
-            pair = sub if not self._diag_only else home_s * N_TARGETS + sub
             cell = e * n_pairs + pair
             # shift each arrival window's per-(defer, column) totals onto
             # their execution cells, prefix-sum over arrival windows: a
@@ -417,11 +456,17 @@ class TemporalPolicy(PlacementPolicy):
 
         # --- shed / unroutable fallback (PlacementPolicy semantics) -------
         shed_s = routable & ~placed
-        pair0 = (col0 % sub_p if not self._diag_only
-                 else home_s * N_TARGETS + col0 % sub_p)
         if self._diag_only:
+            pair0 = home_s * N_TARGETS + col0 % sub_p
             home_row_s = s_s.reshape(n, S + 1, N_TARGETS)[:, 0]
+        elif sparse:
+            pair0 = jnp.take_along_axis(
+                cand_pair_s, (col0 % sub_p)[:, None], axis=1)[:, 0]
+            home_row_s = jnp.take_along_axis(
+                s_s.reshape(n, S + 1, sub_p // N_TARGETS, N_TARGETS)[:, 0],
+                self._cand_home_slot[home_s][:, None, None], axis=1)[:, 0]
         else:
+            pair0 = col0 % sub_p
             home_row_s = jnp.take_along_axis(
                 s_s.reshape(n, S + 1, n_regions, N_TARGETS)[:, 0],
                 home_s[:, None, None], axis=1)[:, 0]

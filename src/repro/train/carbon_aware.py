@@ -29,6 +29,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core.carbon_intensity import GridTrace
+from repro.core.embodied import amortized_g_per_hour
 from repro.core.constants import (
     J_PER_KWH,
     SECONDS_PER_YEAR,
@@ -98,7 +99,8 @@ class CarbonAwareTrainer:
         idle = pod.chips * (1 - active_frac)
         watts = (active * pod.chip_power_w + idle * pod.chip_idle_w) * pod.pue
         op = watts * 3600.0 * hours / J_PER_KWH * ci
-        emb = pod.embodied_g * (3600.0 * hours / pod.lifetime_s)
+        emb = hours * amortized_g_per_hour(pod.embodied_g,
+                                           pod.lifetime_s / 3600.0)
         return op, emb
 
     def plan_hour(self, hour: int, current_pod: int,

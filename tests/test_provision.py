@@ -1,0 +1,176 @@
+"""Joint capacity provisioning (repro.serve.provision): greedy SLO sizing
+vs static over-provisioning vs oracle, plan carbon accounting (operational
+idle + amortized embodied), WorkerPool schedule application, and the
+serve_stream ``plan=`` integration."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.carbon_intensity import CarbonGrid
+from repro.core.constants import J_PER_KWH
+from repro.core.infrastructure import (
+    pack_infra,
+    paper_fleet,
+    server_carbon_rates,
+    tpu_fleet,
+)
+from repro.serve import (
+    FleetRouter,
+    OraclePolicy,
+    PlacementPolicy,
+    WorkerPool,
+    demand_from_arrivals,
+    oracle_plan,
+    provision_greedy,
+    serve_stream,
+    standing_cost_g,
+    static_overprovision_plan,
+)
+from repro.serve.streams import multi_region_stream
+
+ARCH = "h2o-danube-1.8b"
+R, K = 16, 4
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return CarbonGrid.from_sites(R, K, seed=0)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return paper_fleet()
+
+
+@pytest.fixture(scope="module")
+def demand(grid):
+    _, region, t_hours = multi_region_stream(6000, R, seed=1)
+    return demand_from_arrivals(region, t_hours, 24, R)
+
+
+class TestStandingCost:
+    def test_cost_decomposition(self, grid, fleet):
+        cost, emb = standing_cost_g(grid, fleet)
+        emb_rates, idle_w = server_carbon_rates(fleet)
+        ci_dc = np.asarray(grid.ci_hourly * grid.pue).T
+        # mobile column carries no provisioning cost (user-owned hardware)
+        assert (cost[:, :, 0] == 0).all() and emb[0] == 0.0
+        for t in (1, 2):
+            expect = (emb_rates[t]
+                      + idle_w[t] * 3600.0 / J_PER_KWH * ci_dc)
+            np.testing.assert_allclose(cost[:, :, t], expect, rtol=1e-12)
+            assert emb[t] == pytest.approx(emb_rates[t])
+
+
+class TestPlans:
+    def test_greedy_zero_slo_matches_oracle(self, grid, fleet, demand):
+        prov = provision_greedy(demand, grid, fleet, slo_shed=0.0)
+        orac = oracle_plan(demand, grid, fleet)
+        np.testing.assert_array_equal(prov.servers, orac.servers)
+        assert prov.shed_rate == 0.0
+
+    def test_slo_bounds_forecast_shed(self, grid, fleet, demand):
+        for slo in (0.01, 0.05, 0.2):
+            plan = provision_greedy(demand, grid, fleet, slo_shed=slo)
+            assert plan.shed_rate <= slo + 1e-9
+
+    def test_slo_monotone_carbon(self, grid, fleet, demand):
+        totals = [provision_greedy(demand, grid, fleet,
+                                   slo_shed=s).total_carbon_g
+                  for s in (0.0, 0.02, 0.1)]
+        assert totals[0] >= totals[1] >= totals[2]
+
+    def test_provisioned_beats_static_at_equal_or_lower_shed(
+            self, grid, fleet, demand):
+        """ISSUE acceptance: provisioned plans reduce total (operational +
+        amortized embodied) gCO2 vs static over-provisioning at
+        equal-or-lower shed rate."""
+        prov = provision_greedy(demand, grid, fleet, slo_shed=0.0)
+        stat = static_overprovision_plan(demand, grid, fleet)
+        assert prov.total_carbon_g < stat.total_carbon_g
+        assert prov.shed_rate <= stat.shed_rate + 1e-12
+        assert prov.total_carbon_g == pytest.approx(
+            prov.operational_g + prov.embodied_g)
+
+    def test_greedy_prefers_cheaper_cells(self, grid, fleet):
+        """Under an SLO the greedy drops the dirtiest cells first: every
+        provisioned full-server cell is no more carbon-per-slot expensive
+        than any unserved demand cell."""
+        _, region, t_hours = multi_region_stream(6000, R, seed=2)
+        demand = demand_from_arrivals(region, t_hours, 24, R)
+        plan = provision_greedy(demand, grid, fleet, slo_shed=0.1)
+        served = plan.served()
+        unmet = plan.demand - served
+        s = plan.slots_per_server
+        ratio = plan.cost_g / s
+        # cells the greedy filled completely with full servers
+        full = (plan.servers * s <= plan.demand) & (plan.servers > 0)
+        dropped = unmet > s  # cells with at least one full server unmet
+        if full.any() and dropped.any():
+            assert ratio[full].max() <= ratio[dropped].min() + 1e-9
+
+    def test_validation(self, grid, fleet, demand):
+        with pytest.raises(ValueError):
+            provision_greedy(demand, grid, fleet, slo_shed=1.0)
+        with pytest.raises(ValueError):
+            provision_greedy(demand[:12], grid, fleet)
+        with pytest.raises(ValueError):
+            static_overprovision_plan(demand, grid, fleet, headroom=0.9)
+        with pytest.raises(ValueError):
+            demand_from_arrivals(np.zeros(3, int), np.array([0.5, 1.5, 99.0]),
+                                 24, R)
+
+    def test_cap_scale_mobile_unbounded(self, grid, fleet, demand):
+        plan = provision_greedy(demand, grid, fleet)
+        m = plan.cap_scale(5)
+        assert m.shape == (R, 3)
+        assert np.isinf(m[:, 0]).all()
+        np.testing.assert_array_equal(
+            m[:, 1:], plan.servers[5, :, 1:] * plan.slots_per_server)
+
+
+class TestPoolSchedule:
+    def test_apply_to_pool_reaches_plan_counts(self, grid, fleet, demand):
+        plan = provision_greedy(demand, grid, fleet)
+        pool = WorkerPool(R, slots_per_worker=plan.slots_per_server)
+        plan.apply_to_pool(pool, 0)
+        pool.tick()  # one-step launch delay
+        np.testing.assert_array_equal(pool.active[:, 1:],
+                                      plan.servers[0, :, 1:])
+        # idempotent: re-applying the same hour changes nothing
+        plan.apply_to_pool(pool, 0)
+        assert pool.launching.sum() == 0
+        # moving to another hour drains excess / launches deficit, and one
+        # tick later the pool matches the new target exactly
+        h2 = int(np.argmin(plan.servers.sum(axis=(1, 2))))
+        plan.apply_to_pool(pool, h2)
+        pool.tick()
+        np.testing.assert_array_equal(pool.active[:, 1:],
+                                      plan.servers[h2, :, 1:])
+
+    def test_serve_stream_with_plan(self, grid, fleet):
+        """End-to-end: a plan drives the pool inside serve_stream, and the
+        provisioned serve sheds no more than the static one while the plan
+        carries less standing carbon."""
+        cfg = get_config(ARCH)
+        infra = pack_infra(tpu_fleet(), "act")
+        batch, region, t_hours = multi_region_stream(3000, R, seed=3)
+        demand = demand_from_arrivals(region, t_hours, 24, R)
+        prov = provision_greedy(demand, grid, fleet, slots_per_server=16.0)
+        stat = static_overprovision_plan(demand, grid, fleet,
+                                         slots_per_server=16.0)
+        fr = FleetRouter(cfg, grid=grid, policy=PlacementPolicy(
+            OraclePolicy(infra), jnp.asarray(np.ones((R, 3)))))
+        qp = serve_stream(fr, batch, region, t_hours, plan=prov)
+        qs = serve_stream(fr, batch, region, t_hours, plan=stat)
+        n = len(region)
+        assert qp.shed_count + (~qp.shed).sum() == n
+        assert qp.shed_count <= qs.shed_count + int(0.02 * n)
+        assert prov.total_carbon_g < stat.total_carbon_g
+        # end-to-end pinned row: standing + routed operational carbon
+        total_p = prov.total_carbon_g + qp.routed_carbon_g
+        total_s = stat.total_carbon_g + qs.routed_carbon_g
+        assert total_p < total_s
