@@ -29,6 +29,7 @@ def main() -> None:
         policy_throughput,
         roofline,
         router_throughput,
+        scenario_matrix,
     )
     from benchmarks.paper_figures import ALL_FIGS
 
@@ -40,12 +41,20 @@ def main() -> None:
                                                      scalar_sample=8)))
         groups.append(("policy_throughput",
                        lambda: policy_throughput.run(n=2_000, reps=1)))
+        # tiny streams: the matrix rows are not meaningful timings in
+        # smoke, but every gate row still ASSERTS (CI greps them)
+        groups.append(("scenario_matrix",
+                       lambda: scenario_matrix.run(
+                           n=400, csv_path="scenario-matrix.csv")))
     else:
         groups.append(("router_throughput", router_throughput.run))
         # smaller stream than the standalone default keeps the full driver
         # quick; `python -m benchmarks.policy_throughput` has the 1M numbers
         groups.append(("policy_throughput",
                        lambda: policy_throughput.run(n=200_000)))
+        groups.append(("scenario_matrix",
+                       lambda: scenario_matrix.run(
+                           csv_path="scenario-matrix.csv")))
     if args.artifact:
         groups.append(("roofline", lambda: roofline.run(args.artifact)))
     else:

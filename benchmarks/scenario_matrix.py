@@ -1,0 +1,209 @@
+"""Scenario-matrix benchmark: every policy over every named scenario.
+
+Emits the pinned policy-vs-scenario results matrix (one
+``scenario[<scenario>/<policy>]`` row per cell, ``total gCO2`` and rates in
+the derived column) plus three in-bench gate rows that ASSERT — CI greps
+them, so a regression fails the smoke job, not just drifts a number:
+
+  * ``scenario_gate_curtailment_chase`` — on the curtailment scenarios the
+    deferring policy must beat immediate routing on total gCO2, and some
+    deferred work must actually execute inside the near-zero-CI window in
+    the curtailed region (the deferral is chasing the window, not winning
+    by accident).
+  * ``scenario_gate_spike_aware`` — a demand-forecast-aware provisioning
+    plan (spike re-injected into the smoothed forecast) must shed less of
+    a 10x flash crowd than the spike-blind greedy plan, and must be no
+    dirtier than the blanket static over-provision baseline at equal
+    realized shed.
+  * ``scenario_gate_watt_caps`` — watt-shaped per-(window, region, tier)
+    admission counts never exceed the ``TierEnvelope``-derived cap matrix,
+    property-tested over several stream seeds and both capped policies.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.scenario_matrix`` (standalone)
+or via ``python -m benchmarks.run [--smoke]``. The standalone entry also
+writes ``scenario-matrix.csv`` next to the CWD for the CI artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.serve.scenarios import (
+    _cell,
+    caps_violation,
+    default_policies,
+    default_scenarios,
+    matrix_csv,
+    route_scenario,
+)
+
+#: CI grep-gate row names (pinned — .github/workflows/ci.yml greps these).
+GATE_ROWS = ("scenario_gate_curtailment_chase", "scenario_gate_spike_aware",
+             "scenario_gate_watt_caps")
+
+
+def matrix_rows(n: int) -> tuple[list[BenchRow], list]:
+    """One timed row per (scenario, policy) cell; returns the cells too so
+    the gates reuse them instead of re-routing."""
+    rows, cells = [], []
+    scenarios, policies = default_scenarios(), default_policies()
+    for sname, scenario in scenarios.items():
+        for pname, factory in policies.items():
+            t0 = time.perf_counter()
+            res, _, run = route_scenario(scenario, factory, n=n)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            c = _cell(sname, pname, len(run.batch), res)
+            cells.append(c)
+            rows.append(BenchRow(
+                f"scenario[{c.scenario}/{c.policy}]", dt_us,
+                f"n={c.n} total_g={c.total_g:.3f} "
+                f"routed_g={c.routed_g:.3f} shed={c.shed_rate:.3f} "
+                f"spill={c.spill_rate:.3f} defer={c.defer_rate:.3f}"))
+    return rows, cells
+
+
+def curtailment_gate(cells: list, n: int) -> list[BenchRow]:
+    """Deferral must CHASE the curtailment window: beat immediate routing
+    on total gCO2 on both curtailment scenarios, with deferred work
+    actually landing inside the window in the curtailed region."""
+    by = {(c.scenario, c.policy): c for c in cells}
+    t0 = time.perf_counter()
+    for sname in ("curtailment_midday", "curtailment_zero_ci"):
+        defer, imm = by[(sname, "temporal-defer")], by[(sname,
+                                                       "oracle-immediate")]
+        assert defer.total_g < imm.total_g, (
+            f"{sname}: deferral ({defer.total_g:.3f} g) must beat "
+            f"immediate routing ({imm.total_g:.3f} g)")
+    scenario = default_scenarios()["curtailment_midday"]
+    ev = scenario.event
+    res, state, run = route_scenario(
+        scenario, default_policies()["temporal-defer"], n=n)
+    deferred = (np.asarray(state.defer_hours) > 0) & ~np.asarray(state.shed)
+    exec_hod = np.asarray(state.exec_hour) % 24
+    in_window = ((np.asarray(state.exec_region) == ev.curtail_region)
+                 & (exec_hod >= ev.curtail_window[0])
+                 & (exec_hod < ev.curtail_window[1]))
+    landed = int((deferred & in_window).sum())
+    assert landed > 0, "no deferred work landed in the curtailment window"
+    dt_us = (time.perf_counter() - t0) * 1e6
+    d = by[("curtailment_midday", "temporal-defer")]
+    i = by[("curtailment_midday", "oracle-immediate")]
+    return [BenchRow("scenario_gate_curtailment_chase", dt_us,
+                     f"defer_g={d.total_g:.3f} immediate_g={i.total_g:.3f} "
+                     f"landed_in_window={landed} PASS")]
+
+
+def spike_aware_gate(n: int) -> list[BenchRow]:
+    """Demand-forecast-aware provisioning must pre-stage the flash crowd:
+    less realized shed than the spike-blind greedy plan, and no dirtier
+    than blanket static over-provisioning at equal realized shed."""
+    from repro.core.carbon_intensity import DEFAULT_REGIONS, CarbonGrid
+    from repro.core.infrastructure import tpu_fleet
+    from repro.serve.forecast import EmissionsLedger
+    from repro.serve.provision import (
+        demand_from_arrivals,
+        provision_greedy,
+        realized_shed_rate,
+        smoothed_demand_forecast,
+        spike_demand_forecast,
+        static_overprovision_plan,
+    )
+    from repro.serve.streams import arrival_stream
+
+    t0 = time.perf_counter()
+    n_regions, spike_at, spike_mult, spike_w = 4, 20.0, 10.0, 2.0
+    _, region, t_hours = arrival_stream(
+        max(n, 1) / 24.0, 24.0, n_regions, 0, spike_at_h=spike_at,
+        spike_mult=spike_mult, spike_width_h=spike_w)
+    actual = demand_from_arrivals(region, t_hours, 24, n_regions)
+    blind_fc = smoothed_demand_forecast(actual)
+    aware_fc = spike_demand_forecast(actual, spike_at_h=spike_at,
+                                     spike_mult=spike_mult,
+                                     spike_width_h=spike_w)
+    grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+    fleet = tpu_fleet()
+    # fine-grained servers: at smoke-scale demand a 64-slot server would
+    # mask the spike behind integer sizing granularity
+    slots = 8.0
+    aware = provision_greedy(aware_fc, grid, fleet, name="spike-aware",
+                             slots_per_server=slots)
+    blind = provision_greedy(blind_fc, grid, fleet, name="spike-blind",
+                             slots_per_server=slots)
+    static = static_overprovision_plan(blind_fc, grid, fleet,
+                                      headroom=spike_mult,
+                                      slots_per_server=slots)
+    shed_aware = realized_shed_rate(aware, actual)
+    shed_blind = realized_shed_rate(blind, actual)
+    shed_static = realized_shed_rate(static, actual)
+    assert shed_aware < shed_blind, (
+        f"spike-aware plan must shed less of the crowd than the blind "
+        f"plan ({shed_aware:.4f} vs {shed_blind:.4f})")
+    # ~equal shed: static's blanket 10x headroom also absorbs off-spike
+    # Poisson noise the aware plan does not forecast, so allow 1 pp
+    assert shed_aware <= shed_static + 0.01, (
+        f"equal-shed comparison broken: aware {shed_aware:.4f} vs "
+        f"static {shed_static:.4f}")
+    assert aware.total_carbon_g <= static.total_carbon_g, (
+        f"spike-aware plan ({aware.total_carbon_g:.1f} g) must be no "
+        f"dirtier than static over-provisioning "
+        f"({static.total_carbon_g:.1f} g) at equal realized shed")
+    # the ledger side of the same signal: with a demand forecast attached,
+    # capacity is conserved in the step BEFORE the predicted spike
+    d_hourly = actual.sum(axis=(1, 2))
+    led = EmissionsLedger(demand_fc=d_hourly)
+    flat_ci = np.full((n_regions, 24), 100.0)
+    scale_pre, _, _, _ = led.cap_scales(flat_ci, 12, 6, np.zeros(n_regions))
+    assert float(scale_pre.max()) < 1.0, (
+        "ledger must conserve capacity ahead of the predicted spike")
+    dt_us = (time.perf_counter() - t0) * 1e6
+    return [BenchRow(
+        "scenario_gate_spike_aware", dt_us,
+        f"aware_shed={shed_aware:.4f} blind_shed={shed_blind:.4f} "
+        f"aware_g={aware.total_carbon_g:.1f} "
+        f"static_g={static.total_carbon_g:.1f} "
+        f"ledger_prestage_scale={float(scale_pre.max()):.2f} PASS")]
+
+
+def watt_caps_gate(n: int, seeds=(0, 1, 2)) -> list[BenchRow]:
+    """Property test: per-(window, region, tier) admission counts of the
+    watt-shaped fleet never exceed the TierEnvelope-derived cap matrix —
+    over several stream seeds and both capped policies."""
+    t0 = time.perf_counter()
+    base = default_scenarios()["hetero_fleet_watt"]
+    policies = default_policies()
+    worst = -np.inf
+    for seed in seeds:
+        scenario = dataclasses.replace(base, seed=seed)
+        for pname in ("oracle-immediate", "temporal-defer"):
+            res, state, run = route_scenario(scenario, policies[pname], n=n)
+            v = caps_violation(res, state, run.t_hours, run.caps,
+                               run.grid.table.shape[1])
+            worst = max(worst, v)
+            assert v <= 0.0, (
+                f"watt caps exceeded by {v} (seed={seed}, policy={pname})")
+    dt_us = (time.perf_counter() - t0) * 1e6
+    return [BenchRow("scenario_gate_watt_caps", dt_us,
+                     f"seeds={len(seeds)} worst_excess={worst:.0f} PASS")]
+
+
+def run(n: int = 2000, *, csv_path: str | None = None) -> list[BenchRow]:
+    """The full section list; ``csv_path`` additionally writes the raw
+    matrix as CSV (the CI artifact)."""
+    rows, cells = matrix_rows(n)
+    rows += curtailment_gate(cells, n)
+    rows += spike_aware_gate(n)
+    rows += watt_caps_gate(min(n, 600))
+    if csv_path is not None:
+        with open(csv_path, "w") as f:
+            f.write(matrix_csv(cells) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(csv_path="scenario-matrix.csv"):
+        print(row.csv())

@@ -1,6 +1,6 @@
 """Serving with the GreenScale router: from one request to a 1M-request fleet.
 
-Nine acts:
+Ten acts:
 
   1. The paper's Fig-5/9 behaviour live on an LM serving stack: the router
      moves request classes between device / edge / cloud tiers as the grid's
@@ -47,6 +47,11 @@ Nine acts:
      closes: an ``OnlineRefitter`` refits the policy on settled
      (features, decision, actual-carbon) tuples and hot-swaps it between
      steps, recovering most of the static-learned-vs-oracle carbon gap.
+ 10. Scenario matrix: every registered routing policy over a set of named
+     scenarios (a renewable-curtailment window, a 10x flash crowd, a
+     watt-shaped heterogeneous fleet) via ``repro.serve.scenarios`` — the
+     compact version of ``benchmarks/scenario_matrix.py``; the cookbook
+     for composing scenarios is docs/scenarios.md.
 
 Run:  PYTHONPATH=src python examples/serving_router.py [--requests 1000000]
 """
@@ -406,6 +411,31 @@ def main() -> None:
           f"(oracle {g_oracle:.4g} g)")
     print(f"  {r_refit.refits} hot-swaps closed {closed:.0%} of the "
           f"static-learned-vs-oracle routed-carbon gap")
+
+    # --- act 10: the scenario matrix ----------------------------------------
+    # named (arrival pattern x grid event x fleet) compositions, every
+    # registered policy over each — the compact version of
+    # `python -m benchmarks.scenario_matrix` (see docs/scenarios.md)
+    from repro.serve.scenarios import default_policies, default_scenarios, \
+        run_matrix
+    mn = max(200, min(n, 100_000) // 50)
+    msc = {k: v for k, v in default_scenarios().items()
+           if k in ("curtailment_midday", "flash_crowd_10x",
+                    "hetero_fleet_watt")}
+    cells = run_matrix(msc, default_policies(), n=mn)
+    print(f"\nscenario matrix ({len(msc)} scenarios x "
+          f"{len(default_policies())} policies, ~{mn} requests each):")
+    print(f"  {'scenario':<20} {'policy':<18} {'total g':>9} "
+          f"{'shed':>6} {'defer':>6}")
+    for c in cells:
+        print(f"  {c.scenario:<20} {c.policy:<18} {c.total_g:>9.3f} "
+              f"{c.shed_rate:>6.1%} {c.defer_rate:>6.1%}")
+    best = {}
+    for c in cells:
+        if c.scenario not in best or c.total_g < best[c.scenario].total_g:
+            best[c.scenario] = c
+    for name, c in best.items():
+        print(f"  {name}: {c.policy} wins at {c.total_g:.3f} g")
 
 
 if __name__ == "__main__":

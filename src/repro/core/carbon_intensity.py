@@ -236,13 +236,21 @@ class RegionSpec:
 
     ``charging`` sets the device-battery CI of the region's users (paper
     §3.2/Fig 4); ``core_ci`` defaults to the trace's daily mean (the core
-    path crosses many grids, so it sees an averaged intensity).
+    path crosses many grids, so it sees an averaged intensity);
+    ``power_budget_w`` optionally declares how many WATTS of serving
+    hardware the region can energize per tier [mobile, edge_dc,
+    hyper_dc] — ``region_power_budgets`` stacks the budgets and
+    ``infrastructure.watt_caps`` divides them by a ``TierEnvelope``'s
+    per-server TDP to produce a watt-shaped (R, 3) admission ``cap_scale``
+    matrix. ``None`` (the default) means unconstrained and changes no
+    existing decision.
     """
 
     name: str
     grid: Grid
     charging: ChargingBehavior = ChargingBehavior.AVERAGE
     core_ci: float | None = None
+    power_budget_w: tuple[float, float, float] | None = None
 
 
 DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
@@ -251,6 +259,24 @@ DEFAULT_REGIONS: tuple[RegionSpec, ...] = (
     RegionSpec("urban", Grid.URBAN),
     RegionSpec("rural", Grid.RURAL),
 )
+
+
+def region_power_budgets(regions: tuple[RegionSpec, ...]) -> np.ndarray:
+    """(R, 3) float64 per-(region, tier) serving power budgets in WATTS —
+    rows of ``np.inf`` where a ``RegionSpec`` declares no
+    ``power_budget_w``. Pair with ``infrastructure.watt_caps`` to turn
+    the watt budgets into an (R, 3) admission-slot ``cap_scale`` matrix
+    (per-tier TDP envelopes decide how many servers each budget
+    energizes)."""
+    out = np.full((len(regions), 3), np.inf)
+    for i, spec in enumerate(regions):
+        if spec.power_budget_w is not None:
+            b = np.asarray(spec.power_budget_w, np.float64)
+            if b.shape != (3,):
+                raise ValueError(
+                    f"power_budget_w must have 3 entries, got {b.shape}")
+            out[i] = b
+    return out
 
 
 @jax.tree_util.register_dataclass

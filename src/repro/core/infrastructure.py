@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -256,6 +258,108 @@ def tpu_fleet() -> Fleet:
                  n_user_edge=16.0, n_user_dc=2048.0, n_batch_dc=256.0)
 
 
+# ------------------------------------------------------------------------------
+# Per-tier TDP/VRAM envelopes: watt-shaped heterogeneous-fleet capacity
+# ------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierEnvelope:
+    """Per-tier accelerator envelopes: TDP and VRAM of one server unit.
+
+    Telemetry-style hardware constraints promoted to first-class capacity
+    inputs, indexed [mobile, edge_dc, hyper_dc] like every (R, 3) matrix
+    in the repo:
+
+    ``tdp_w``       watts one server of the tier draws at its power cap.
+                    A regional power budget divided by this is the number
+                    of servers the region can energize — capacity shaped
+                    by POWER (watts), not by a server count.
+    ``vram_bytes``  bytes of accelerator memory one server exposes — the
+                    KV-cache budget bounding concurrent decode states
+                    (``repro.serve.queue.BatchFormer.for_envelope`` sizes
+                    drafts against it; ``np.inf`` = unbounded).
+    """
+
+    name: str
+    tdp_w: tuple[float, float, float]
+    vram_bytes: tuple[float, float, float]
+
+    def servers_for_power(self, power_budget_w) -> np.ndarray:
+        """Whole servers a per-tier power budget (W) energizes:
+        ``floor(budget / tdp_w)`` elementwise over a (..., 3) budget
+        array. ``np.inf`` budgets stay ``np.inf`` (unconstrained)."""
+        b = np.asarray(power_budget_w, np.float64)
+        tdp = np.asarray(self.tdp_w, np.float64)
+        if (tdp <= 0).any():
+            raise ValueError("tdp_w entries must be positive")
+        return np.where(np.isinf(b), np.inf, np.floor(b / tdp))
+
+    def kv_slots(self, tier: int, slot_bytes: float) -> int | None:
+        """Concurrent KV-cache slots tier ``tier``'s VRAM holds, at
+        ``slot_bytes`` bytes per decode slot (= max_seq tokens x bytes
+        per cached token); ``None`` when that tier's VRAM is ``np.inf``
+        (unbounded). At least 1 — a server that exists serves."""
+        v = float(self.vram_bytes[tier])
+        if np.isinf(v):
+            return None
+        if slot_bytes <= 0:
+            raise ValueError("slot_bytes must be positive")
+        return max(1, int(v // float(slot_bytes)))
+
+
+def tpu_envelope() -> TierEnvelope:
+    """``tpu_fleet`` tier envelopes: phone NPU sharing ~8 GiB of SoC
+    memory, a v5e-8 slice (8 x 16 GiB HBM) drawing its calibrated server
+    power cap, and a v5e-256 pod (256 x 16 GiB HBM)."""
+    gib = 1024.0**3
+    return TierEnvelope(
+        name="tpu-v5e",
+        tdp_w=(6.0, 8 * TPU_V5E_TDP_W + 400.0,
+               256 * TPU_V5E_TDP_W + 8000.0),
+        vram_bytes=(8.0 * gib, 8 * 16.0 * gib, 256 * 16.0 * gib))
+
+
+def paper_envelope() -> TierEnvelope:
+    """``paper_fleet`` tier envelopes: Pixel 3 (4 GiB shared), p3.2xlarge
+    (one V100, 16 GiB HBM), p4d.24xlarge (8 x A100-40GiB)."""
+    gib = 1024.0**3
+    return TierEnvelope(
+        name="paper",
+        tdp_w=(3.797, 693.5, 7000.0),
+        vram_bytes=(4.0 * gib, 16.0 * gib, 8 * 40.0 * gib))
+
+
+def watt_caps(envelope: TierEnvelope, power_budget_w, *,
+              slots_per_server: float = 64.0) -> np.ndarray:
+    """(R, 3) float32 admission-slot matrix from per-region power budgets.
+
+    ``power_budget_w`` is (R, 3) watts available to each (region, tier)
+    — ``np.inf`` = unconstrained (see
+    ``carbon_intensity.region_power_budgets``). Each tier energizes
+    ``floor(budget / tdp_w)`` whole servers at ``slots_per_server``
+    requests/hour each, so admission capacity is bounded by the power a
+    site can actually deliver, not by a nominal server count. The result
+    flows through the existing ``cap_scale`` seam: build the routing
+    policy with UNIT caps and pass this matrix as ``cap_scale`` — the
+    matrix IS the per-(region, tier) hourly admission limit, exactly like
+    ``WorkerPool.cap_matrix``. The mobile column is forced unbounded
+    (on-device execution draws the requester's own battery), matching the
+    repo-wide ``caps[:, 0] = inf`` convention.
+    """
+    b = np.asarray(power_budget_w, np.float64)
+    if b.ndim != 2 or b.shape[1] != 3:
+        raise ValueError(f"power_budget_w must be (R, 3), got {b.shape}")
+    if (b < 0).any():
+        raise ValueError("power budgets must be non-negative")
+    if slots_per_server <= 0:
+        raise ValueError("slots_per_server must be positive")
+    m = (envelope.servers_for_power(b)
+         * float(slots_per_server)).astype(np.float32)
+    m[:, 0] = np.inf
+    return m
+
+
 def server_carbon_rates(fleet: Fleet, embodied_model: str = "act", *,
                         utilization: float = 1.0):
     """Per-tier provisioning carbon rates (paper §4.3 accounting).
@@ -269,8 +373,6 @@ def server_carbon_rates(fleet: Fleet, embodied_model: str = "act", *,
     tier is user-owned — serving fleets never provision tier 0 — but is
     included for shape symmetry with the (R, 3) capacity matrices.
     """
-    import numpy as np
-
     from repro.core.embodied import amortized_g_per_hour
 
     if embodied_model not in ("act", "lca"):

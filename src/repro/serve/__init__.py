@@ -43,6 +43,9 @@ from repro.serve.provision import (
     demand_from_arrivals,
     oracle_plan,
     provision_greedy,
+    realized_shed_rate,
+    smoothed_demand_forecast,
+    spike_demand_forecast,
     standing_cost_g,
     static_overprovision_plan,
 )
@@ -69,3 +72,18 @@ from repro.serve.distributed import (
     enable_compile_cache,
     route_arrays_sharded,
 )
+from repro.serve.scenarios import (
+    ArrivalSpec,
+    FleetSpec,
+    GridEventSpec,
+    MatrixCell,
+    Scenario,
+    ScenarioRun,
+    caps_violation,
+    default_policies,
+    default_scenarios,
+    matrix_csv,
+    route_scenario,
+    run_matrix,
+)
+from repro.serve.streams import bake_ci_events

@@ -52,6 +52,21 @@ class EmissionsLedger:
     banked credit (scale caps up to ``spend_scale``) to drain deferrable
     work before it does. The balance is capped at ``max_credit_h`` and can
     never go negative, so credits spent <= credits earned by construction.
+
+    With a DEMAND forecast attached (``demand_fc``, requests/hour over
+    the same absolute horizon), the ledger is additionally flash-crowd
+    aware: a predicted spike — the lookahead's peak demand exceeding the
+    current step's mean by ``spike_threshold``x — forces the CONSERVE
+    branch regardless of the CI trend ('spike expected: strongly conserve
+    credit'), banking capacity credit ahead of the crowd; once the spike
+    ARRIVES (current demand at ``spike_threshold``x the horizon mean) the
+    banked credit is spent, raising the caps exactly when the crowd needs
+    them. ``demand_fc = None`` (the default) reproduces the CI-only
+    behaviour bit-for-bit; the spent-<=-earned property is unchanged
+    (spending is still bounded by the balance).
+
+    Units: CI tables are gCO2/kWh, demand is requests/hour, the balance
+    is in cap-scale-hours (one unit = one step of fully-conserved caps).
     """
 
     clean_threshold: float = 0.95
@@ -60,19 +75,30 @@ class EmissionsLedger:
     spend_scale: float = 1.25
     max_credit_h: float = 4.0
     lookahead_h: int = 12
+    #: optional (H,) or (R, H) demand forecast (requests/hour, absolute
+    #: horizon hours — e.g. ``spike_demand_forecast``'s hourly totals).
+    demand_fc: np.ndarray | None = None
+    #: demand ratio that counts as a flash crowd (peak-ahead / current
+    #: mean, or current / horizon mean once it lands).
+    spike_threshold: float = 1.5
 
     def __post_init__(self):
         if not 0.0 < self.conserve_scale <= 1.0:
             raise ValueError("conserve_scale must be in (0, 1]")
         if self.spend_scale < 1.0:
             raise ValueError("spend_scale must be >= 1")
+        if self.spike_threshold <= 1.0:
+            raise ValueError("spike_threshold must be > 1")
 
     def cap_scales(self, fc_ci: np.ndarray, now: int, step_h: int,
                    balance: np.ndarray
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """(cap_scale, new_balance, earned, spent) per region for the step
         starting at ``now``; ``fc_ci`` is the (R, H) forecast grid-CI table
-        of the current roll. Pure — the caller threads ``balance``."""
+        of the current roll (gCO2/kWh). Pure — the caller threads
+        ``balance``. Finite even at CI exactly 0 (a curtailment window):
+        the trend denominator is floored, so a zero-CI present reads as a
+        strong spend-now signal instead of dividing by zero."""
         h = fc_ci.shape[1]
         cur = fc_ci[:, now:min(now + step_h, h)].mean(axis=1)
         fut_lo = min(now + step_h, h)
@@ -83,6 +109,22 @@ class EmissionsLedger:
         trend = fc_ci[:, fut_lo:fut_hi].mean(axis=1) / np.maximum(cur, 1e-9)
         conserve = trend < self.clean_threshold
         spend = trend > self.dirty_threshold
+        if self.demand_fc is not None:
+            d = np.asarray(self.demand_fc, np.float64)
+            if d.ndim == 1:
+                d = np.broadcast_to(d[None, :], fc_ci.shape)
+            if d.shape != fc_ci.shape:
+                raise ValueError(
+                    f"demand_fc must be ({fc_ci.shape[0]}, {h}) or ({h},), "
+                    f"got {d.shape}")
+            cur_d = d[:, now:fut_lo].mean(axis=1)
+            peak_ahead = d[:, fut_lo:fut_hi].max(axis=1)
+            spike_ahead = (peak_ahead
+                           > self.spike_threshold * np.maximum(cur_d, 1e-9))
+            spike_now = (cur_d > self.spike_threshold
+                         * np.maximum(d.mean(axis=1), 1e-9))
+            conserve = (conserve | spike_ahead) & ~spike_now
+            spend = (spend | spike_now) & ~spike_ahead
         earned = np.where(conserve, 1.0 - self.conserve_scale, 0.0)
         spendable = np.where(
             spend, np.minimum(self.spend_scale - 1.0, balance), 0.0)

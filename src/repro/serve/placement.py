@@ -348,6 +348,8 @@ class PlacementPolicy(RoutingPolicy):
                     f"router's)")
 
     def initial_state(self, n_regions: int, n_requests: int) -> PlacementState:
+        """Fresh ``PlacementState`` (zero admitted counts / nothing shed);
+        requires a bound grid — admission windows span its horizon."""
         if self._caps.shape[0] != n_regions:
             raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
                              f"fleet has {n_regions}")
@@ -364,6 +366,8 @@ class PlacementPolicy(RoutingPolicy):
             shed_pair=jnp.zeros((n_regions, N_TARGETS), jnp.int32))
 
     def scores(self, w, env, avail, *, hour=None):
+        """The inner policy's home-region scores (same units); placement
+        preference lives in ``pair_scores`` / the factorized variants."""
         return self.inner.scores(w, env, avail, hour=hour)
 
     def pair_scores(self, w, env, avail, home: jax.Array,
@@ -559,6 +563,12 @@ class PlacementPolicy(RoutingPolicy):
                outputs=None, order=None, inv_order=None, slack=None,
                factors=None, fc_table=None, cap_scale=None, used0=None,
                axis_name=None):
+        """(N,) int32 tier targets + ``PlacementState`` under segment-rank
+        (region, tier) admission. Parity anchors: identity adjacency
+        reproduces ``CapacityLimiter`` decisions bit-for-bit; sharded
+        streams (``axis_name``) reconcile to the single-device program
+        bit-identically; ``cap_scale=None`` uses the configured caps
+        (requests per cell per window) unchanged."""
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:

@@ -135,12 +135,19 @@ class RoutingPolicy(abc.ABC):
     name = "policy"
 
     def initial_state(self, n_regions: int, n_requests: int) -> Any:
+        """Fresh threaded decision state for a stream of ``n_requests``
+        over ``n_regions`` regions; stateless policies return ``()``."""
         return ()
 
     @abc.abstractmethod
     def scores(self, w: Workload, env: Environment, avail: jax.Array, *,
                hour: jax.Array | None = None) -> jax.Array:
-        """(N, 3) per-tier scores, lower is better, +inf = never pick."""
+        """(N, 3) per-tier scores, lower is better, +inf = never pick.
+
+        Units are policy-defined — only the ORDERING is contracted (the
+        oracle's carbon metric scores in gCO2/request, latency in seconds,
+        energy in joules; learned scores are unitless model outputs).
+        ``hour`` is the absolute grid-horizon hour of each request."""
 
     def decide(self, w: Workload, env: Environment, avail: jax.Array,
                state: Any, *, region: jax.Array | None = None,
@@ -195,6 +202,11 @@ class OraclePolicy(RoutingPolicy):
     ``"latency"``/``"energy"`` are the paper's Fig-5/6 baselines — as
     policies they route head-to-head on the same stream instead of living as
     special-cased aggregate columns inside the fleet router.
+
+    Score units per metric: carbon = gCO2/request (operational at the
+    env's CI plus amortized embodied), latency = seconds, energy =
+    joules. ``decide`` reproduces ``carbon_model.route_many_envs``'s
+    per-metric targets bit-for-bit (the scalar-router parity anchor).
     """
 
     infra: InfraParams
@@ -212,6 +224,8 @@ class OraclePolicy(RoutingPolicy):
                                     net_slowdown=None), 0))
 
     def scores(self, w, env, avail, *, hour=None):
+        """(N, 3) metric scores (gCO2 / s / J per request) via one vmapped
+        Table-1 evaluation; Table-1 scores are hour-free (CI is in env)."""
         return self._scores_many(w, env, avail)
 
     def scores_from_outputs(self, out: RouteOutputs,
@@ -324,6 +338,9 @@ class OraclePolicy(RoutingPolicy):
                outputs=None, order=None, inv_order=None, slack=None,
                factors=None, fc_table=None, cap_scale=None, used0=None,
                axis_name=None):
+        """(N,) int32 targets straight from the Table-1 search — reuses the
+        router's precomputed ``RouteOutputs`` when given, and is bit-
+        identical to ``carbon_model.route_many_envs`` either way."""
         out = outputs if outputs is not None else \
             carbon_model.route_many_envs(w, self.infra, env, avail)
         t = {"carbon": out.target, "latency": out.target_latency,
@@ -464,6 +481,12 @@ class LearnedPolicy(RoutingPolicy):
     @classmethod
     def fit(cls, scheduler, train: SchedulerDataset,
             emb_lca: bool = False, infra: Any = None) -> "LearnedPolicy":
+        """Fit ``scheduler`` offline on ``train`` and wrap the fitted
+        scorer as a policy. The dataset's feature statistics (and its CI
+        normalization, gCO2/kWh over 100) travel along, so live streams
+        are featurized exactly as the training rows were; CI-linear
+        schedulers additionally get their ``ci_sens`` sensitivities probed
+        here for the one-einsum candidate path."""
         if train.feat_mean is None or train.feat_std is None:
             raise ValueError(
                 "dataset has no feature statistics — rebuild it with "
@@ -627,6 +650,8 @@ class CapacityLimiter(RoutingPolicy):
         self.name = f"capped-{self.inner.name}"
 
     def initial_state(self, n_regions: int, n_requests: int) -> CapacityState:
+        """Zeroed admission counts (requests per (region, tier)) and an
+        all-False shed mask, validated against the cap matrix's regions."""
         if self._caps.shape[0] != n_regions:
             raise ValueError(f"caps cover {self._caps.shape[0]} regions, "
                              f"fleet has {n_regions}")
@@ -635,12 +660,18 @@ class CapacityLimiter(RoutingPolicy):
             shed=jnp.zeros((n_requests,), bool))
 
     def scores(self, w, env, avail, *, hour=None):
+        """The inner policy's scores, untouched — capacity only reorders
+        ADMISSION, never preference (same units as the inner policy)."""
         return self.inner.scores(w, env, avail, hour=hour)
 
     def decide(self, w, env, avail, state, *, region=None, hour=None,
                outputs=None, order=None, inv_order=None, slack=None,
                factors=None, fc_table=None, cap_scale=None, used0=None,
                axis_name=None):
+        """(N,) int32 targets under greedy per-window cap admission (see
+        the class docstring); generous caps are an exact no-op vs the
+        inner policy, and ``PlacementPolicy`` with identity adjacency
+        reproduces these decisions bit-for-bit."""
         if axis_name is not None:
             raise NotImplementedError(
                 "CapacityLimiter's lax.scan admission walks windows "

@@ -219,7 +219,12 @@ class BatchFormer:
     ever compile). ``engine`` optionally sizes each draft against a
     reference ``ServeEngine``'s KV capacity: a draft never holds more
     concurrent requests (or total prompt+decode tokens) than the engine's
-    decode-state slots fit. Drafts cross hourly window boundaries freely.
+    decode-state slots fit. ``kv_slots``/``max_seq`` apply the same
+    decode-slot sizing WITHOUT a live engine — the per-tier VRAM path:
+    ``for_envelope`` derives the slot count from a
+    ``repro.core.infrastructure.TierEnvelope``'s VRAM bytes, so drafts
+    respect the accelerator memory of the hardware tier that will hold
+    them. Drafts cross hourly window boundaries freely.
 
     With a ``mesh`` attached (the router's routing mesh —
     ``repro.serve.distributed``), drafts pad to ``n_devices * pow2``
@@ -233,12 +238,40 @@ class BatchFormer:
     min_pad: int = 16
     engine: object | None = None  # ServeEngine, optional
     mesh: object | None = None  # 1-D routing mesh, optional
+    #: engine-less KV sizing: at most ``kv_slots`` concurrent requests
+    #: per draft AND at most ``kv_slots * max_seq`` total prompt+decode
+    #: tokens (each request clamped to ``max_seq`` — a longer one holds a
+    #: full slot), mirroring ``ServeEngine.kv_fit_rows``. None = no VRAM
+    #: bound (the historical behaviour, bit-for-bit).
+    kv_slots: int | None = None
+    max_seq: int = 4096
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.kv_slots is not None and self.kv_slots < 1:
+            raise ValueError(f"kv_slots must be >= 1, got {self.kv_slots}")
         self._shards = (1 if self.mesh is None
                         else int(self.mesh.devices.size))
+
+    @classmethod
+    def for_envelope(cls, envelope, *, kv_bytes_per_token: float,
+                     max_seq: int = 4096, tiers: tuple[int, ...] = (1, 2),
+                     **kw) -> "BatchFormer":
+        """A former sized against per-tier VRAM envelopes
+        (``repro.core.infrastructure.TierEnvelope``). One decode slot
+        costs ``max_seq * kv_bytes_per_token`` bytes of accelerator
+        memory; the draft bound is the MOST CONSTRAINED of ``tiers``'
+        slot counts — conservative, so whichever of those tiers the
+        router then picks can hold an entire draft's decode states.
+        Mobile (tier 0) is excluded by default: on-device requests use
+        the requester's own memory, one request at a time. Tiers with
+        ``np.inf`` VRAM impose no bound."""
+        slot_bytes = float(kv_bytes_per_token) * float(max_seq)
+        slots = [envelope.kv_slots(t, slot_bytes) for t in tiers]
+        finite = [s for s in slots if s is not None]
+        return cls(kv_slots=min(finite) if finite else None,
+                   max_seq=max_seq, **kw)
 
     def _pad_to(self, k: int) -> int:
         """Draft pad size: pow-2 bucketing, scaled to a device multiple
@@ -256,11 +289,20 @@ class BatchFormer:
         i = 0
         while i < len(ready_idx):
             chunk = ready_idx[i:i + self.max_batch]
-            if self.engine is not None:
+            if self.engine is not None or self.kv_slots is not None:
                 seq = (np.asarray(batch.prompt_tokens)[chunk]
                        + np.asarray(batch.max_new_tokens)[chunk])
-                k = max(1, self.engine.kv_fit_rows(seq))
-                chunk = chunk[:k]
+                if self.engine is not None:
+                    chunk = chunk[:max(1, self.engine.kv_fit_rows(seq))]
+                if self.kv_slots is not None:
+                    # same rule as ServeEngine.kv_fit_rows, from the
+                    # envelope's VRAM instead of a live engine
+                    s = np.minimum(seq[:len(chunk)].astype(np.float64),
+                                   self.max_seq)
+                    n_rows = min(len(s), int(self.kv_slots))
+                    fits = (np.cumsum(s[:n_rows])
+                            <= float(self.kv_slots) * float(self.max_seq))
+                    chunk = chunk[:max(1, int(fits.sum()))]
             i += len(chunk)
             k = len(chunk)
             pad_to = self._pad_to(k)

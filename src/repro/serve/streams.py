@@ -195,6 +195,62 @@ def deferrable_stream_multiday(
     return batch, region, t_hours + 24.0 * day
 
 
+def bake_ci_events(
+    grid, *,
+    ci_step_region: int | None = None,
+    ci_step_window: tuple[int, int] = (6, 18),
+    ci_step_mult: float = 2.5,
+    curtail_region: int | None = None,
+    curtail_window: tuple[int, int] = (11, 15),
+    curtail_floor: float = 0.0,
+):
+    """Bake observed grid events into a grid's actuals AND forecast.
+
+      * **CI step change** — ``ci_step_region``'s hourly CI (gCO2/kWh) is
+        multiplied by ``ci_step_mult`` inside ``ci_step_window`` (a coal
+        plant ramping in / a renewable lull).
+      * **Renewable-curtailment window** — ``curtail_region``'s CI is
+        multiplied by ``curtail_floor`` (>= 0, ~0) inside
+        ``curtail_window``: excess wind/solar is being curtailed, so grid
+        power there is briefly nearly carbon-free. ``curtail_floor = 0``
+        models an exactly-zero-CI window (every consumer of the table must
+        stay finite and non-negative — regression-tested).
+
+    Both event kinds are applied to ``ci_hourly`` and, when a forecast
+    view is attached, to ``ci_forecast`` too: step changes and
+    curtailment notices are ANNOUNCED (unit commitments, ISO curtailment
+    schedules), not surprises — a deferral policy reading the forecast
+    may legitimately chase the window. Windows index ABSOLUTE horizon
+    hours. With both regions ``None`` the grid is returned unchanged
+    (bit-for-bit)."""
+    import jax.numpy as jnp
+
+    if ci_step_region is None and curtail_region is None:
+        return grid
+    ci = np.asarray(grid.ci_hourly).copy()
+    fc = (None if grid.ci_forecast is None
+          else np.asarray(grid.ci_forecast).copy())
+
+    def scale_window(region: int, window: tuple[int, int],
+                     mult: float) -> None:
+        a, b = window
+        ci[region, a:b] *= mult
+        if fc is not None:
+            fc[region, a:b] *= mult
+
+    if ci_step_region is not None:
+        scale_window(ci_step_region, ci_step_window, ci_step_mult)
+    if curtail_region is not None:
+        if curtail_floor < 0.0:
+            raise ValueError(
+                f"curtail_floor must be >= 0, got {curtail_floor}")
+        scale_window(curtail_region, curtail_window, curtail_floor)
+    changes = {"ci_hourly": jnp.asarray(ci)}
+    if fc is not None:
+        changes["ci_forecast"] = jnp.asarray(fc)
+    return dataclasses.replace(grid, **changes)
+
+
 def grid_event_stream(
     n: int, grid, *, seed: int = 0,
     ci_step_region: int | None = 0,
@@ -202,8 +258,12 @@ def grid_event_stream(
     ci_step_mult: float = 2.5,
     outage_site: int | None = 1,
     outage_window: tuple[int, int] = (8, 12),
+    curtail_region: int | None = None,
+    curtail_window: tuple[int, int] = (11, 15),
+    curtail_floor: float = 0.0,
 ):
-    """Grid-event scenario: a regional CI step change plus a site outage.
+    """Grid-event scenario: a regional CI step change, an optional
+    renewable-curtailment window, plus a site outage.
 
     Returns ``(batch, region, t_hours, grid2, outage)`` against an
     existing (typically mesoscale sparse, ``CarbonGrid.from_sites``)
@@ -215,6 +275,12 @@ def grid_event_stream(
         actuals (and forecast view, when one is attached — the event is
         observed, not a surprise), so carbon-aware policies route around
         it while CI-blind ones pay it.
+      * **Curtailment window** — ``curtail_region``'s CI multiplied by
+        ``curtail_floor`` (~0) inside ``curtail_window``: a briefly
+        near-zero-CI stretch (excess renewables being curtailed) that
+        deferral policies should CHASE rather than avoid. Baked into
+        actuals + forecast like the step change (see ``bake_ci_events``);
+        default ``None`` leaves every existing stream bit-for-bit.
       * **Site outage** — ``outage`` is an (R, H) bool mask, True where
         ``outage_site`` is dark during ``outage_window``. Capacity-side:
         zero the site's DC columns of ``cap_scale`` for masked hours —
@@ -226,27 +292,19 @@ def grid_event_stream(
     Arrivals are the canonical request mix, uniformly homed across sites,
     diurnal within each day of the grid's horizon.
     """
-    import jax.numpy as jnp
-
     rng = np.random.default_rng(seed)
     batch = synthetic_stream(rng, n)
     r_count = grid.n_regions
-    ci = np.asarray(grid.ci_hourly).copy()
-    h_count = ci.shape[1]
+    h_count = int(np.asarray(grid.ci_hourly).shape[1])
     region = rng.integers(0, r_count, n)
     days = max(h_count // 24, 1)
     t_hours = np.clip(diurnal_hours(rng, n) + 24.0 * rng.integers(0, days, n),
                       0.0, h_count - 1e-6)
 
-    if ci_step_region is not None:
-        a, b = ci_step_window
-        ci[ci_step_region, a:b] *= ci_step_mult
-        changes = {"ci_hourly": jnp.asarray(ci)}
-        if grid.ci_forecast is not None:
-            fc = np.asarray(grid.ci_forecast).copy()
-            fc[ci_step_region, a:b] *= ci_step_mult
-            changes["ci_forecast"] = jnp.asarray(fc)
-        grid = dataclasses.replace(grid, **changes)
+    grid = bake_ci_events(
+        grid, ci_step_region=ci_step_region, ci_step_window=ci_step_window,
+        ci_step_mult=ci_step_mult, curtail_region=curtail_region,
+        curtail_window=curtail_window, curtail_floor=curtail_floor)
 
     outage = np.zeros((r_count, h_count), bool)
     if outage_site is not None:

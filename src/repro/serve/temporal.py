@@ -172,6 +172,8 @@ class TemporalPolicy(PlacementPolicy):
         return True
 
     def initial_state(self, n_regions: int, n_requests: int) -> TemporalState:
+        """Fresh ``TemporalState``: the placement fields plus zeroed
+        ``exec_hour`` / ``defer_hours`` (absolute horizon hours)."""
         base = super().initial_state(n_regions, n_requests)
         return TemporalState(
             counts=base.counts,
@@ -261,6 +263,12 @@ class TemporalPolicy(PlacementPolicy):
                outputs=None, order=None, inv_order=None, slack=None,
                factors=None, fc_table=None, cap_scale=None, used0=None,
                axis_name=None):
+        """(N,) int32 tier targets + ``TemporalState`` under joint
+        (defer, region, tier) admission. ``slack`` is per-request hours of
+        deadline headroom (clipped to ``max_defer_h``); all-zero slack
+        reproduces ``PlacementPolicy.decide`` bit-for-bit, and
+        ``risk_lambda = 0`` (or a forecast-free grid) scores candidates
+        bit-identically to the error-blind engine."""
         n = w.flops.shape[0]
         n_regions, n_pairs = self._caps.shape[0], self._caps.size
         if n == 0:

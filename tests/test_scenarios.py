@@ -1,0 +1,409 @@
+"""Scenario-matrix tests: curtailment CI=0 edge cases (every score stays
+finite through an exactly-zero-CI window, risk inflation never negative,
+deferral actually lands inside the window), flash-crowd conservation under
+a 10x spike, watt-shaped cap math + the never-exceeded property, spike-
+aware provisioning beating the spike-blind plan out of sample, VRAM-aware
+batch sizing, and the matrix runner's determinism."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.carbon_intensity import (
+    DEFAULT_REGIONS,
+    CarbonGrid,
+    region_power_budgets,
+)
+from repro.core.carbon_model import forecast_risk_scale, inflate_ci_risk
+from repro.core.infrastructure import (
+    TierEnvelope,
+    paper_envelope,
+    tpu_envelope,
+    tpu_fleet,
+    watt_caps,
+)
+from repro.serve import (
+    BatchFormer,
+    EmissionsLedger,
+    FleetRouter,
+    OraclePolicy,
+    TemporalPolicy,
+    serve_stream,
+)
+from repro.serve.provision import (
+    demand_from_arrivals,
+    provision_greedy,
+    realized_shed_rate,
+    smoothed_demand_forecast,
+    spike_demand_forecast,
+)
+from repro.serve.scenarios import (
+    Scenario,
+    caps_violation,
+    default_policies,
+    default_scenarios,
+    matrix_csv,
+    route_scenario,
+    run_matrix,
+)
+from repro.serve.streams import arrival_stream, bake_ci_events
+
+ARCH = "h2o-danube-1.8b"
+N_REGIONS = len(DEFAULT_REGIONS)
+SMALL = 160  # small-but-nondegenerate stream for routed scenario tests
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+# ---------------------------------------------------------------------------
+# bake_ci_events
+# ---------------------------------------------------------------------------
+
+class TestBakeCIEvents:
+    def test_noop_is_bit_identical(self):
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        grid2 = bake_ci_events(grid)
+        assert np.array_equal(np.asarray(grid.ci_hourly),
+                              np.asarray(grid2.ci_hourly))
+
+    def test_curtailment_hits_actuals_and_forecast(self):
+        grid = CarbonGrid.fully_connected(
+            DEFAULT_REGIONS).forecast_from_actual(0.05, seed=3)
+        grid2 = bake_ci_events(grid, curtail_region=1,
+                               curtail_window=(11, 15), curtail_floor=0.0)
+        for tab in (grid2.ci_hourly, grid2.ci_forecast):
+            a = np.asarray(tab)
+            assert (a[1, 11:15] == 0.0).all()
+            assert (a[1, :11] > 0.0).all() and (a[1, 15:] > 0.0).all()
+        # untouched regions identical in both views
+        np.testing.assert_array_equal(np.asarray(grid.ci_hourly)[0],
+                                      np.asarray(grid2.ci_hourly)[0])
+
+    def test_ci_step_scales_window(self):
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        grid2 = bake_ci_events(grid, ci_step_region=0,
+                               ci_step_window=(6, 18), ci_step_mult=2.5)
+        a, b = np.asarray(grid.ci_hourly), np.asarray(grid2.ci_hourly)
+        np.testing.assert_allclose(b[0, 6:18], 2.5 * a[0, 6:18], rtol=1e-6)
+        np.testing.assert_array_equal(b[0, :6], a[0, :6])
+
+    def test_negative_floor_rejected(self):
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        with pytest.raises(ValueError, match="curtail_floor"):
+            bake_ci_events(grid, curtail_region=0, curtail_floor=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# curtailment edge cases: CI exactly 0
+# ---------------------------------------------------------------------------
+
+class TestZeroCICurtailment:
+    def test_risk_scale_and_inflation_nonnegative_at_zero_ci(self):
+        # risk inflation is multiplicative on CI: at CI exactly 0 the
+        # inflated components must stay exactly 0 (never NaN or negative)
+        for lead in (0.0, 1.0, 12.0):
+            s = float(forecast_risk_scale(lead, 0.06, 1.0))
+            assert np.isfinite(s) and s >= 1.0
+        home = jnp.zeros((4, 5))
+        dc = jnp.zeros((4, 3))
+        h2, d2 = inflate_ci_risk(home, dc, forecast_risk_scale(6.0, 0.06,
+                                                               1.0))
+        assert np.array_equal(np.asarray(h2), np.zeros((4, 5)))
+        assert np.array_equal(np.asarray(d2), np.zeros((4, 3)))
+
+    def test_ledger_finite_at_zero_ci(self):
+        led = EmissionsLedger()
+        ci = np.zeros((3, 24))
+        scale, bal, earned, spent = led.cap_scales(ci, 0, 6, np.zeros(3))
+        for arr in (scale, bal, earned, spent):
+            assert np.isfinite(arr).all()
+        assert (scale > 0).all()
+
+    @pytest.mark.parametrize("policy", ["oracle-immediate",
+                                        "temporal-defer"])
+    def test_zero_ci_scenario_scores_finite(self, policy):
+        scenario = default_scenarios()["curtailment_zero_ci"]
+        res, state, run = route_scenario(
+            scenario, default_policies()[policy], n=SMALL)
+        carbon = np.asarray(res.carbon_g)
+        assert np.isfinite(carbon).all()
+        assert (carbon >= 0.0).all()
+        assert np.isfinite(float(res.total_carbon_g))
+
+    def test_deferral_lands_inside_window(self):
+        scenario = default_scenarios()["curtailment_midday"]
+        ev = scenario.event
+        res, state, run = route_scenario(
+            scenario, default_policies()["temporal-defer"], n=SMALL)
+        deferred = (np.asarray(state.defer_hours) > 0) & ~np.asarray(
+            state.shed)
+        assert deferred.any()
+        hod = np.asarray(state.exec_hour) % 24
+        landed = (deferred
+                  & (np.asarray(state.exec_region) == ev.curtail_region)
+                  & (hod >= ev.curtail_window[0])
+                  & (hod < ev.curtail_window[1]))
+        assert landed.any(), "deferral never chased the curtailment window"
+
+    def test_deferral_beats_immediate_on_curtailment(self):
+        cells = {(c.scenario, c.policy): c for c in run_matrix(
+            {"curtailment_midday":
+             default_scenarios()["curtailment_midday"]},
+            {k: v for k, v in default_policies().items()
+             if k != "latency-greedy"}, n=SMALL)}
+        defer = cells[("curtailment_midday", "temporal-defer")]
+        imm = cells[("curtailment_midday", "oracle-immediate")]
+        assert defer.total_g < imm.total_g
+
+
+# ---------------------------------------------------------------------------
+# flash crowd: conservation under a 10x spike
+# ---------------------------------------------------------------------------
+
+class TestFlashCrowdConservation:
+    def test_conservation_under_spike(self, cfg):
+        batch, region, t = arrival_stream(
+            30.0, n_regions=N_REGIONS, seed=5, batch_frac=0.4,
+            spike_at_h=20.0, spike_mult=10.0, spike_width_h=2.0)
+        caps = np.full((N_REGIONS, 3), np.inf)
+        caps[:, 1] = caps[:, 2] = max(2.0, len(batch) / (N_REGIONS * 24))
+        base = FleetRouter(cfg)
+        fr = FleetRouter(cfg, policy=TemporalPolicy(
+            OraclePolicy(base.infra), caps, max_defer_h=8))
+        res = serve_stream(fr, batch, region, t, step_h=2)
+        n = len(batch)
+        assert int(res.shed.sum()) + int((~res.shed).sum()) == n
+        routed = shed = 0
+        for s in res.steps:
+            # pushed == routed + shed + held at every serve step
+            assert s.drafted == s.routed + s.shed + s.held
+            routed += s.routed
+            shed += s.shed
+            assert s.queued_after + routed + shed == n
+        assert routed + shed == n
+
+    def test_spike_multiplies_arrivals(self):
+        quiet = arrival_stream(30.0, seed=7)[2]
+        crowd = arrival_stream(30.0, seed=7, spike_at_h=20.0,
+                               spike_mult=10.0, spike_width_h=2.0)[2]
+        in_w = lambda t: ((t >= 19.0) & (t < 21.0)).sum()
+        assert in_w(crowd) > 4 * max(in_w(quiet), 1)
+
+
+# ---------------------------------------------------------------------------
+# watt-shaped heterogeneous fleets
+# ---------------------------------------------------------------------------
+
+class TestWattCaps:
+    def test_envelope_server_math(self):
+        env = TierEnvelope(name="t", tdp_w=(5.0, 1000.0, 50000.0),
+                           vram_bytes=(float("inf"), 16 * 2.0**30,
+                                       8 * 40 * 2.0**30))
+        servers = env.servers_for_power(
+            np.array([[np.inf, 3500.0, 100000.0]]))
+        assert servers[0, 0] == np.inf
+        assert servers[0, 1] == 3.0 and servers[0, 2] == 2.0
+        caps = watt_caps(env, np.array([[np.inf, 3500.0, 100000.0]]),
+                         slots_per_server=10.0)
+        assert caps[0, 0] == np.inf  # mobile is user-owned: unbounded
+        assert caps[0, 1] == 30.0 and caps[0, 2] == 20.0
+
+    def test_region_power_budgets_roundtrip(self):
+        regs = tuple(
+            dataclasses.replace(r, power_budget_w=(np.inf, 2000.0, 60000.0))
+            if i % 2 == 0 else r
+            for i, r in enumerate(DEFAULT_REGIONS))
+        b = region_power_budgets(regs)
+        assert b.shape == (N_REGIONS, 3)
+        assert (b[0] == [np.inf, 2000.0, 60000.0]).all()
+        assert np.isinf(b[1]).all()  # no budget -> unbounded
+
+    def test_envelopes_are_sane(self):
+        for env in (tpu_envelope(), paper_envelope()):
+            assert all(t > 0 for t in env.tdp_w)
+            assert all(v > 0 for v in env.vram_bytes)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    @pytest.mark.parametrize("policy", ["oracle-immediate",
+                                        "temporal-defer"])
+    def test_watt_caps_never_exceeded(self, seed, policy):
+        scenario = dataclasses.replace(
+            default_scenarios()["hetero_fleet_watt"], seed=seed)
+        res, state, run = route_scenario(
+            scenario, default_policies()[policy], n=SMALL)
+        v = caps_violation(res, state, run.t_hours, run.caps,
+                           run.grid.table.shape[1])
+        assert v <= 0.0
+
+
+# ---------------------------------------------------------------------------
+# spike-aware provisioning
+# ---------------------------------------------------------------------------
+
+class TestSpikeAwareProvisioning:
+    def test_smoothed_window1_is_identity(self):
+        d = np.random.default_rng(0).uniform(0, 9, (24, 2, 3))
+        np.testing.assert_array_equal(
+            smoothed_demand_forecast(d, window_h=1), d)
+
+    def test_smoothing_flattens_the_spike(self):
+        d = np.ones((24, 1, 3))
+        d[12] = 10.0
+        s = smoothed_demand_forecast(d, window_h=5)
+        assert s[12, 0, 1] < d[12, 0, 1]
+        sp = spike_demand_forecast(d, spike_at_h=12.5, spike_mult=10.0)
+        assert sp[12, 0, 1] > s[12, 0, 1]
+        # off-spike hours match the blind forecast exactly
+        np.testing.assert_array_equal(sp[:10], s[:10])
+
+    def test_aware_plan_beats_blind_out_of_sample(self):
+        _, region, t = arrival_stream(
+            600.0 / 24.0, 24.0, N_REGIONS, 0, spike_at_h=20.0,
+            spike_mult=10.0, spike_width_h=2.0)
+        actual = demand_from_arrivals(region, t, 24, N_REGIONS)
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        fleet = tpu_fleet()
+        aware = provision_greedy(
+            spike_demand_forecast(actual, spike_at_h=20.0, spike_mult=10.0,
+                                  spike_width_h=2.0),
+            grid, fleet, slots_per_server=8.0)
+        blind = provision_greedy(smoothed_demand_forecast(actual), grid,
+                                 fleet, slots_per_server=8.0)
+        assert realized_shed_rate(aware, actual) < realized_shed_rate(
+            blind, actual)
+
+    def test_realized_shed_rate_zero_demand(self):
+        grid = CarbonGrid.fully_connected(DEFAULT_REGIONS)
+        plan = provision_greedy(np.zeros((24, N_REGIONS, 3)), grid,
+                                tpu_fleet())
+        assert realized_shed_rate(plan, np.zeros((24, N_REGIONS, 3))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# demand-aware emissions ledger
+# ---------------------------------------------------------------------------
+
+class TestLedgerDemandForecast:
+    def _demand(self):
+        d = np.full(24, 10.0)
+        d[12:14] = 100.0
+        return d
+
+    def test_conserves_before_and_spends_during_spike(self):
+        led = EmissionsLedger(demand_fc=self._demand())
+        ci = np.full((2, 24), 100.0)  # flat CI: only demand drives it
+        pre, _, earned, _ = led.cap_scales(ci, 6, 6, np.zeros(2))
+        assert (pre < 1.0).all() and (earned > 0).all()
+        dur, _, _, spent = led.cap_scales(ci, 12, 2, np.full(2, 1.0))
+        assert (dur > 1.0).all() and (spent > 0).all()
+
+    def test_none_demand_is_bit_identical(self):
+        ci = np.abs(np.sin(np.arange(48.0))).reshape(2, 24) * 300 + 50
+        a = EmissionsLedger().cap_scales(ci, 0, 6, np.zeros(2))
+        b = EmissionsLedger(demand_fc=None).cap_scales(ci, 0, 6,
+                                                       np.zeros(2))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_bad_shapes_rejected(self):
+        with pytest.raises(ValueError, match="spike_threshold"):
+            EmissionsLedger(spike_threshold=1.0)
+        led = EmissionsLedger(demand_fc=np.ones((3, 7)))
+        with pytest.raises(ValueError, match="demand_fc"):
+            led.cap_scales(np.ones((2, 24)), 0, 6, np.zeros(2))
+
+
+# ---------------------------------------------------------------------------
+# VRAM-aware batch formation
+# ---------------------------------------------------------------------------
+
+class TestBatchFormerVram:
+    @staticmethod
+    def _drafts(prompts, former):
+        from repro.serve.queue import RequestQueue
+        from repro.serve.router import RequestBatch
+        n = len(prompts)
+        batch = RequestBatch(
+            prompt_tokens=np.asarray(prompts, np.float64),
+            max_new_tokens=np.full(n, 64.0),
+            latency_budget_s=np.full(n, 30.0),
+            bytes_per_token=np.full(n, 4.0),
+            available=np.ones((n, 3), bool))
+        q = RequestQueue()
+        q.push(batch, np.zeros(n, np.int32), np.zeros(n))
+        return former.draft(q, q.ready(before_h=1.0), now=0)
+
+    def test_kv_slots_bounds_rows(self):
+        drafts = self._drafts([4096.0] * 10,
+                              BatchFormer(max_batch=64, kv_slots=3,
+                                          max_seq=4096))
+        assert len(drafts[0].idx) == 3  # one full-length sequence per slot
+
+    def test_kv_budget_packs_short_sequences(self):
+        # 3 slots x 4096 tokens of budget: rows cap at kv_slots even when
+        # eight 1024-token prompts (+64 new) fit within the token budget
+        drafts = self._drafts([1024.0] * 8,
+                              BatchFormer(max_batch=64, kv_slots=3,
+                                          max_seq=4096))
+        assert len(drafts[0].idx) == 3
+        unlimited = self._drafts([1024.0] * 8, BatchFormer(max_batch=64))
+        assert len(unlimited[0].idx) == 8
+
+    def test_for_envelope_takes_min_dc_tier(self):
+        env = TierEnvelope(name="t", tdp_w=(5.0, 1000.0, 50000.0),
+                           vram_bytes=(float("inf"), 8 * 2.0**30,
+                                       64 * 2.0**30))
+        former = BatchFormer.for_envelope(env, kv_bytes_per_token=2.0**20,
+                                          max_seq=1024)
+        # edge tier: 8 GiB / (1 MiB * 1024) = 8 slots; hyper: 64 -> min 8
+        assert former.kv_slots == 8
+        assert former.max_seq == 1024
+
+    def test_for_envelope_infinite_vram_unbounded(self):
+        env = TierEnvelope(name="t", tdp_w=(5.0, 1000.0, 50000.0),
+                           vram_bytes=(float("inf"), float("inf"),
+                                       float("inf")))
+        former = BatchFormer.for_envelope(env, kv_bytes_per_token=2.0**20)
+        assert former.kv_slots is None
+
+
+# ---------------------------------------------------------------------------
+# the matrix runner
+# ---------------------------------------------------------------------------
+
+class TestRunMatrix:
+    def test_registry_shape(self):
+        scenarios, policies = default_scenarios(), default_policies()
+        assert len(scenarios) >= 6 and len(policies) >= 3
+        assert all(s.name == k for k, s in scenarios.items())
+
+    def test_matrix_rows_and_determinism(self):
+        scen = {k: v for k, v in default_scenarios().items()
+                if k in ("steady_diurnal", "hetero_fleet_watt")}
+        pol = {k: v for k, v in default_policies().items()
+               if k in ("oracle-immediate", "latency-greedy")}
+        a = run_matrix(scen, pol, n=SMALL)
+        b = run_matrix(scen, pol, n=SMALL)
+        assert [c.scenario for c in a] == ["steady_diurnal"] * 2 + [
+            "hetero_fleet_watt"] * 2
+        assert [(c.total_g, c.shed_rate) for c in a] == [
+            (c.total_g, c.shed_rate) for c in b]
+        csv = matrix_csv(a)
+        assert csv.splitlines()[0].startswith("scenario,policy,")
+        assert len(csv.splitlines()) == 5
+
+    def test_scenario_build_is_seeded(self):
+        s = default_scenarios()["flash_crowd_10x"]
+        r1, r2 = s.build(SMALL), s.build(SMALL)
+        np.testing.assert_array_equal(r1.t_hours, r2.t_hours)
+        np.testing.assert_array_equal(np.asarray(r1.grid.ci_hourly),
+                                      np.asarray(r2.grid.ci_hourly))
+        r3 = dataclasses.replace(s, seed=9).build(SMALL)
+        assert len(r3.t_hours) != len(r1.t_hours) or not np.array_equal(
+            r3.t_hours, r1.t_hours)

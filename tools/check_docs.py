@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Doc-reference linter: every symbol and path the docs mention must exist.
+
+Scans README.md, ROADMAP.md and docs/*.md for
+
+* inline-backticked dotted references under the ``repro.`` / ``benchmarks.``
+  namespaces (e.g. ``repro.serve.scenarios.run_matrix``) — resolved by
+  importing the longest importable module prefix and walking the remainder
+  with getattr;
+* inline-backticked repo file paths (e.g. ``tools/run_tests.sh``,
+  ``src/repro/serve/scenarios.py``, ``docs/``) — checked against the tree;
+* relative markdown links — resolved against the linking file's directory.
+
+Fenced code blocks are skipped (they hold arbitrary code, not references),
+as are tokens containing glob/placeholder characters. Exits non-zero with
+one line per unresolved reference; CI runs this as the ``check-docs`` job.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DOC_FILES = [REPO / "README.md", REPO / "ROADMAP.md"] + sorted(
+    (REPO / "docs").glob("*.md")
+)
+
+# Inline code spans; fenced blocks are stripped first.
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+INLINE_RE = re.compile(r"`([^`\n]+)`")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+DOTTED_RE = re.compile(r"^(repro|benchmarks)(\.\w+)+$")
+
+# Characters that mark a token as a pattern/placeholder, not a reference.
+SKIP_CHARS = set("~*<>{}$()=, ")
+
+# Path-like tokens are only checked for these suffixes (scratch outputs
+# like *.csv are produced at runtime and legitimately absent).
+PATH_SUFFIXES = (".py", ".sh", ".md", ".yml", ".yaml", ".toml", ".json", ".txt")
+
+
+def resolve_dotted(token: str) -> bool:
+    """True iff ``token`` resolves to an importable module or an attribute
+    chain hanging off one (longest module prefix wins)."""
+    parts = token.split(".")
+    for cut in range(len(parts), 0, -1):
+        mod_name = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(mod_name)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def resolve_path(token: str) -> bool:
+    target = REPO / token
+    if token.endswith("/"):
+        return target.is_dir()
+    return target.is_file()
+
+
+def is_path_candidate(token: str) -> bool:
+    if token.startswith(("http://", "https://", "-", "/")):
+        return False
+    if token.endswith("/"):
+        return True
+    return token.endswith(PATH_SUFFIXES)
+
+
+def check_file(path: Path) -> list[str]:
+    errors: list[str] = []
+    text = FENCE_RE.sub("", path.read_text())
+    rel = path.relative_to(REPO)
+
+    for m in INLINE_RE.finditer(text):
+        token = m.group(1).strip()
+        if SKIP_CHARS & set(token):
+            continue
+        if DOTTED_RE.match(token):
+            if not resolve_dotted(token):
+                errors.append(f"{rel}: unresolved symbol `{token}`")
+        elif is_path_candidate(token):
+            if not resolve_path(token):
+                errors.append(f"{rel}: missing path `{token}`")
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{rel}: broken link `{m.group(1)}`")
+
+    return errors
+
+
+def main() -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    all_errors: list[str] = []
+    n_checked = 0
+    for doc in DOC_FILES:
+        if not doc.is_file():
+            all_errors.append(f"missing doc file: {doc.relative_to(REPO)}")
+            continue
+        n_checked += 1
+        all_errors.extend(check_file(doc))
+    if all_errors:
+        print(f"check_docs: {len(all_errors)} unresolved reference(s):")
+        for e in all_errors:
+            print(f"  {e}")
+        return 1
+    print(f"check_docs: OK ({n_checked} files, all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
